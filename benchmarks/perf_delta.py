@@ -1,0 +1,52 @@
+"""Render the baseline-vs-final dominant-roofline-term comparison for
+EXPERIMENTS.md §Perf spillover: the §Perf work shipped as production
+defaults, so EVERY pair moved, not just the three hillclimbed ones.
+
+  PYTHONPATH=src python -m benchmarks.perf_delta [--mesh 1pod]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(d: str, mesh: str) -> dict:
+    out = {}
+    for f in glob.glob(f"{d}/*_{mesh}.json"):
+        r = json.load(open(f))
+        if r.get("ok"):
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="1pod")
+    args = ap.parse_args()
+    base = load("results/dryrun_baseline", args.mesh)
+    final = load("results/dryrun", args.mesh)
+
+    print("| arch | shape | baseline dom. term (s) | final dom. term (s) | Δ | bottleneck b→f |")
+    print("|---|---|---|---|---|---|")
+    total_b = total_f = 0.0
+    for key in sorted(base, key=lambda k: (k[0], SHAPE_ORDER.get(k[1], 9))):
+        if key not in final:
+            continue
+        rb, rf = base[key]["roofline"], final[key]["roofline"]
+        tb = max(rb["t_compute_s"], rb["t_memory_s"], rb["t_collective_s"])
+        tf = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        total_b += tb
+        total_f += tf
+        d = f"{tb / tf:.1f}×" if tf else "—"
+        print(f"| {key[0]} | {key[1]} | {tb:.3g} | {tf:.3g} | {d} "
+              f"| {rb['bottleneck']}→{rf['bottleneck']} |")
+    print(f"\nsum of dominant terms: {total_b:.1f} s -> {total_f:.1f} s "
+          f"({total_b / total_f:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""NetFuse beyond the paper's eval models: merging modern architectures.
+
+The paper evaluates ResNet/ResNeXt/BERT/XLNet (2020).  The same
+input-weight-local construction applies to the architectures this repo
+ships (DESIGN.md §4); this example demonstrates the two interesting
+cases:
+
+1. Mixture-of-Experts (qwen3-family): merging M fine-tuned MoE instances
+   yields a *block-diagonal* MoE — M·E experts in M routing groups.
+   Instance m's router can only ever select instance m's experts, which
+   is exactly the paper's grouped-op rule ("merging G-group ops gives
+   M·G groups") applied to expert weights.
+2. xLSTM (recurrent): the merged model carries M independent recurrent
+   states; prefill->decode handoff stays exact per instance.
+
+Both checks assert exact per-instance isolation: perturbing instance j's
+weights never changes instance i's outputs.
+
+Run: PYTHONPATH=src python examples/netfuse_modern.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.configs import registry
+from repro.models import common
+
+
+def _make_batch(cfg1, m: int, b: int, s: int):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (m, b, s), 0, cfg1.vocab_size)
+    batch = {"tokens": toks}
+    if cfg1.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (m, b, cfg1.num_image_patches, cfg1.vision_embed_dim))
+    if cfg1.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (m, b, cfg1.num_audio_frames, cfg1.d_model))
+    return batch
+
+
+def merged_forward_equals_solo(arch: str, m: int = 3, b: int = 2, s: int = 16):
+    cfg1 = registry.get_smoke_config(arch).with_(
+        dtype="float32", param_dtype="float32")
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    params_i = [api.init(cfg1, k) for k in keys]          # M "fine-tuned" models
+    merged = common.merge_instances(params_i, api.axes(cfg1))
+    cfgM = cfg1.with_(num_instances=m)
+
+    batch = _make_batch(cfg1, m, b, s)
+
+    out = api.train_logits(cfgM, merged, batch, remat=False)
+    fused = out[0] if isinstance(out, tuple) else out
+
+    worst = 0.0
+    for i in range(m):
+        bi = {k: v[i:i + 1] for k, v in batch.items()}
+        oi = api.train_logits(cfg1, params_i[i], bi, remat=False)
+        oi = oi[0] if isinstance(oi, tuple) else oi
+        worst = max(worst, float(jnp.max(jnp.abs(fused[i:i + 1] - oi))))
+    return worst
+
+
+def isolation_check(arch: str, m: int = 3, b: int = 2, s: int = 12):
+    """Perturb instance 1's weights; instance 0's output must not move."""
+    cfg1 = registry.get_smoke_config(arch).with_(
+        dtype="float32", param_dtype="float32")
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    params_i = [api.init(cfg1, k) for k in keys]
+    merged = common.merge_instances(params_i, api.axes(cfg1))
+    cfgM = cfg1.with_(num_instances=m)
+    batch = _make_batch(cfg1, m, b, s)
+
+    def inst0_logits(p):
+        out = api.train_logits(cfgM, p, batch, remat=False)
+        return (out[0] if isinstance(out, tuple) else out)[0]
+
+    base = inst0_logits(merged)
+    axes = api.axes(cfg1)
+
+    def poke(ax, x):
+        # the instances axis position comes from the logical axes tree
+        # (naively matching shape[0]==m would hit 3-layer stacks at m=3)
+        if isinstance(ax, tuple) and "instances" in ax:
+            i = ax.index("instances")
+            return x.at[(slice(None),) * i + (1,)].mul(3.0)
+        return x
+
+    is_leaf = lambda t: isinstance(t, tuple) and all(
+        isinstance(a, (str, type(None))) for a in t
+    )
+    poked = jax.tree.map(poke, axes, merged, is_leaf=is_leaf)
+    moved = float(jnp.max(jnp.abs(inst0_logits(poked) - base)))
+    return moved
+
+
+def ssm_decode_isolation(m: int = 2, b: int = 2):
+    """Merged xLSTM: prefill then decode; states evolve independently."""
+    cfg1 = registry.get_smoke_config("xlstm-1.3b").with_(
+        dtype="float32", param_dtype="float32")
+    cfgM = cfg1.with_(num_instances=m)
+    keys = jax.random.split(jax.random.PRNGKey(0), m)
+    params_i = [api.init(cfg1, k) for k in keys]
+    merged = common.merge_instances(params_i, api.axes(cfg1))
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (m, b, 8), 0, cfg1.vocab_size)
+    logits, state = api.prefill(cfgM, merged, {"tokens": toks})
+    nxt = jnp.argmax(logits, -1)[:, :, None].astype(jnp.int32)
+    step_logits, _ = api.decode_step(cfgM, merged, state, nxt, jnp.full((m, b), 8, jnp.int32))
+
+    worst = 0.0
+    for i in range(m):
+        li, si = api.prefill(cfg1, params_i[i], {"tokens": toks[i:i + 1]})
+        ni = jnp.argmax(li, -1)[:, :, None].astype(jnp.int32)
+        di, _ = api.decode_step(cfg1, params_i[i], si, ni, jnp.full((1, b), 8, jnp.int32))
+        worst = max(worst, float(jnp.max(jnp.abs(step_logits[i:i + 1] - di))))
+    return worst
+
+
+def main():
+    print("=== NetFuse on modern architectures (smoke-size configs) ===")
+    for arch in ("qwen3-moe-30b-a3b", "olmoe-1b-7b", "xlstm-1.3b",
+                 "hymba-1.5b", "internvl2-26b", "whisper-small"):
+        d = merged_forward_equals_solo(arch)
+        iso = isolation_check(arch)
+        status = "OK " if d < 2e-4 and iso == 0.0 else "FAIL"
+        print(f"[{status}] {arch:<20s} merged==solo max|diff| {d:.2e}   "
+              f"cross-instance leak {iso:.1e}")
+        assert d < 2e-4 and iso == 0.0, arch
+
+    d = ssm_decode_isolation()
+    print(f"[OK ] xlstm prefill->decode merged==solo max|diff| {d:.2e}")
+    assert d < 2e-4
+    print("\nAll modern-architecture merges are exact and instance-isolated —")
+    print("the paper's grouped-op rule generalizes to MoE routing groups and")
+    print("recurrent state without modification.")
+
+
+if __name__ == "__main__":
+    main()

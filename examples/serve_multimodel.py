@@ -1,0 +1,121 @@
+"""End-to-end driver: fine-tune M task variants, merge, SERVE with
+batched requests (the paper's deployment scenario, §1-2).
+
+Pipeline:
+  1. pretrain a small base model on a synthetic corpus,
+  2. fine-tune M=4 task variants (different data streams -> different
+     weights, same architecture — the transfer-learning setting),
+  3. NetFuse-merge the four checkpoints (offline, timed),
+  4. serve a mixed request stream through the MultiModelServer's fused
+     decode, and verify each response matches its own model's greedy
+     decode run in isolation,
+  5. compare fused serving throughput against the sequential baseline.
+
+Run: PYTHONPATH=src python examples/serve_multimodel.py
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.configs import registry
+from repro.data import pipeline
+from repro.models import common, dense
+from repro.optim import cosine_with_warmup
+from repro.serving import MultiModelServer, Request
+from repro.train import loop as train_loop
+
+M = 4
+STEPS_PRETRAIN = 60
+STEPS_FINETUNE = 25
+
+
+def main():
+    cfg1 = registry.get_smoke_config("tinyllama-1.1b").with_(vocab_size=128)
+    print(f"base model: {cfg1.num_layers}L d={cfg1.d_model} vocab={cfg1.vocab_size}")
+
+    # 1. pretrain
+    data = pipeline.SyntheticLM(cfg1.vocab_size, 1, seed=0)
+    sched = cosine_with_warmup(3e-3, 5, STEPS_PRETRAIN)
+    state, losses = train_loop.train_loop(
+        cfg1, data, steps=STEPS_PRETRAIN, batch_size=8, seq_len=32,
+        lr_schedule=sched, log_every=20,
+    )
+    print(f"pretrain: loss {losses[0][1]:.3f} -> {losses[-1][1]:.3f}")
+
+    # 2. fine-tune M task variants on different streams
+    checkpoints = []
+    for task in range(M):
+        tdata = pipeline.SyntheticLM(cfg1.vocab_size, 1, seed=100 + task)
+        tstate, tl = train_loop.train_loop(
+            cfg1, tdata, steps=STEPS_FINETUNE, batch_size=8, seq_len=32,
+            lr_schedule=cosine_with_warmup(1e-3, 2, STEPS_FINETUNE),
+            log_every=STEPS_FINETUNE, state=state,
+        )
+        checkpoints.append(tstate.params)
+        print(f"fine-tune task {task}: loss -> {tl[-1][1]:.3f}")
+
+    # 3. merge (paper §4: offline, amortized over serving)
+    axes = dense.axes(cfg1)
+    t0 = time.perf_counter()
+    merged = common.merge_instances(checkpoints, axes)
+    jax.block_until_ready(jax.tree.leaves(merged)[0])
+    print(f"NetFuse merge of {M} checkpoints: {(time.perf_counter()-t0)*1e3:.1f} ms")
+
+    # 4. serve a mixed stream
+    cfg = cfg1.with_(num_instances=M)
+    server = MultiModelServer(cfg, merged, slots_per_instance=2,
+                              max_context=64, temperature=0.0)
+    rng = np.random.default_rng(7)
+    reqs = [
+        Request(instance=int(rng.integers(M)),
+                prompt=rng.integers(1, cfg.vocab_size, size=int(rng.integers(3, 9))).tolist(),
+                max_new_tokens=8)
+        for _ in range(12)
+    ]
+    ids = [server.submit(r) for r in reqs]
+    t0 = time.perf_counter()
+    results = {r.request_id: r for r in server.run_until_drained()}
+    fused_time = time.perf_counter() - t0
+    ntok = sum(len(r.tokens) for r in results.values())
+    print(f"fused serving: {len(results)} requests / {ntok} tokens "
+          f"in {fused_time:.2f}s ({server.steps} fused steps)")
+
+    # verify against isolated per-model greedy decode
+    for req, rid in zip(reqs, ids):
+        pi = common.take_instance(merged, axes, req.instance)
+        toks = list(req.prompt)
+        for _ in range(req.max_new_tokens):
+            logits = dense.forward(cfg1, pi, jnp.asarray(toks, jnp.int32)[None, None])
+            toks.append(int(jnp.argmax(logits[0, 0, -1])))
+        assert results[rid].tokens == toks[len(req.prompt):], rid
+    print("OK: every fused response == its own model's isolated decode")
+
+    # 5. sequential-baseline comparison: same requests through M separate
+    # single-model servers (KV-cached decode, same slot count), drained
+    # one model at a time — the paper's "sequential" strategy.
+    solo_servers = []
+    for i in range(M):
+        pi = common.take_instance(merged, axes, i)
+        solo_servers.append(MultiModelServer(
+            cfg1, pi, slots_per_instance=2, max_context=64, temperature=0.0
+        ))
+    for req in reqs:
+        solo_servers[req.instance].submit(
+            Request(instance=0, prompt=req.prompt, max_new_tokens=req.max_new_tokens)
+        )
+    t0 = time.perf_counter()
+    total_steps = 0
+    for s in solo_servers:
+        s.run_until_drained()
+        total_steps += s.steps
+    seq_time = time.perf_counter() - t0
+    print(f"sequential baseline (cached decode, {total_steps} steps): "
+          f"{seq_time:.2f}s -> fused speedup {seq_time / fused_time:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Uniform model API: family dispatch + input specs for every
+(architecture × input shape) combination.
+
+Entry points used by the launcher, tests and benchmarks:
+
+  init / abstract_params / axes
+  train_logits(cfg, params, batch)   -> (logits, aux) aligned with labels
+  prefill(cfg, params, batch)        -> (last logits, cache)
+  decode_step(cfg, params, cache, tokens, pos) -> (logits, cache)
+  make_cache / abstract_cache / cache_axes
+  input_specs(cfg, shape)            -> batch of ShapeDtypeStructs
+
+Batch layout per family (see DESIGN.md §5):
+  dense/moe/ssm/hybrid: {tokens (M,B,S), labels (M,B,S)}
+  vlm:   {tokens (M,B,S-P), image_embeds (M,B,P,Dv), labels (M,B,S-P)}
+  audio: {tokens (M,B,S), frames (M,B,F,D), labels (M,B,S)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import audio, dense, hybrid, moe, ssm, vlm
+from repro.models import layers as L
+
+_FAMILY = {
+    "dense": dense, "moe": moe, "ssm": ssm, "hybrid": hybrid,
+    "vlm": vlm, "audio": audio,
+}
+
+
+def family_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(cfg, key):
+    return family_module(cfg).init(cfg, key)
+
+
+def abstract_params(cfg):
+    return family_module(cfg).abstract_params(cfg)
+
+
+def axes(cfg):
+    return family_module(cfg).axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# forward entry points
+# ---------------------------------------------------------------------------
+
+
+def train_logits(cfg: ModelConfig, params, batch, *, remat: bool | None = None):
+    """Logits aligned with batch['labels'] (next-token labels)."""
+    remat = cfg.remat if remat is None else remat
+    fam = cfg.family
+    if fam in ("dense",):
+        return dense.forward(cfg, params, batch["tokens"], remat=remat)
+    if fam == "moe":
+        logits, aux = moe.forward(cfg, params, batch["tokens"], remat=remat, return_aux=True)
+        return logits, aux
+    if fam == "ssm":
+        return ssm.forward(cfg, params, batch["tokens"], remat=remat)
+    if fam == "hybrid":
+        return hybrid.forward(cfg, params, batch["tokens"], remat=remat)
+    if fam == "vlm":
+        return vlm.text_logits(cfg, params, batch["tokens"], batch["image_embeds"], remat=remat)
+    if fam == "audio":
+        return audio.forward(cfg, params, batch["tokens"], batch["frames"], remat=remat)
+    raise ValueError(fam)
+
+
+def prefill(cfg: ModelConfig, params, batch, *, cache_len: int | None = None):
+    fam = cfg.family
+    if fam == "dense":
+        return dense.prefill(cfg, params, batch["tokens"], cache_len=cache_len)
+    if fam == "moe":
+        return moe.prefill(cfg, params, batch["tokens"], cache_len=cache_len)
+    if fam == "ssm":
+        return ssm.prefill(cfg, params, batch["tokens"])
+    if fam == "hybrid":
+        return hybrid.prefill(cfg, params, batch["tokens"])
+    if fam == "vlm":
+        return vlm.prefill(cfg, params, batch["tokens"], batch["image_embeds"], cache_len=cache_len)
+    if fam == "audio":
+        return audio.prefill(cfg, params, batch["tokens"], batch["frames"], cache_len=cache_len)
+    raise ValueError(fam)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+def make_cache(cfg: ModelConfig, m: int, b: int, context_len: int):
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return dense.make_cache(cfg, m, b, context_len)
+    if fam == "moe":
+        return moe.make_cache(cfg, m, b, context_len)
+    if fam == "ssm":
+        return ssm.make_state(cfg, m, b)
+    if fam == "hybrid":
+        return hybrid.make_cache(cfg, m, b, context_len)
+    if fam == "audio":
+        return audio.make_cache(cfg, m, b, context_len)
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg, m, b, context_len):
+    return jax.eval_shape(lambda: make_cache(cfg, m, b, context_len))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — nothing allocated)
+# ---------------------------------------------------------------------------
+
+
+def _tok(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for jit(...).lower(**input_specs).
+
+    Returns {"batch": ...} for train/prefill; decode shapes return
+    {"cache": ..., "tokens": ..., "pos": ...}."""
+    m = cfg.num_instances
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    b = shape.global_batch // m
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            p = cfg.num_image_patches
+            batch = {
+                "tokens": _tok(m, b, s - p),
+                "image_embeds": jax.ShapeDtypeStruct((m, b, p, cfg.vision_embed_dim), dt),
+            }
+            if shape.kind == "train":
+                batch["labels"] = _tok(m, b, s - p)
+        elif cfg.family == "audio":
+            batch = {
+                "tokens": _tok(m, b, s),
+                "frames": jax.ShapeDtypeStruct((m, b, cfg.num_audio_frames, cfg.d_model), dt),
+            }
+            if shape.kind == "train":
+                batch["labels"] = _tok(m, b, s)
+        else:
+            batch = {"tokens": _tok(m, b, s)}
+            if shape.kind == "train":
+                batch["labels"] = _tok(m, b, s)
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "cache": abstract_cache(cfg, m, b, s),
+        "tokens": _tok(m, b, 1),
+        "pos": _tok(m, b),
+    }
+
+
+# ---------------------------------------------------------------------------
+# loss (used by train_step and smoke tests)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Mean next-token cross entropy (+ MoE aux)."""
+    from repro.models.common import constrain
+
+    out = train_logits(cfg, params, batch)
+    aux = jnp.float32(0.0)
+    if cfg.family == "moe":
+        out, aux = out
+    logits = out.astype(jnp.float32)
+    # loss region: batch over data, vocab over model (the (tokens, V)
+    # logits tensor is the largest activation in training — see DESIGN.md)
+    logits = constrain(logits, "instances", "batch", None, "vocab")
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    loss = nll.mean()
+    return loss + cfg.router_aux_loss * aux, {"nll": loss, "aux": aux}
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical-axis tree matching abstract_cache's structure."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return dense.cache_axes(cfg)
+    if fam == "moe":
+        return moe.cache_axes(cfg)
+    if fam == "ssm":
+        return ssm.state_axes(cfg)
+    if fam == "hybrid":
+        return hybrid.cache_axes(cfg)
+    if fam == "audio":
+        return audio.cache_axes(cfg)
+    raise ValueError(fam)

@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch (+ the paper's own
+evaluation models). See repro.configs.registry for the --arch map."""
+from repro.configs.base import (
+    DECODE_32K, LONG_500K, PREFILL_32K, SHAPES, TRAIN_4K, ModelConfig, ShapeConfig,
+)
+from repro.configs import registry

@@ -1,0 +1,18 @@
+"""olmoe-1b-7b — 64-expert top-8 MoE [arXiv:2409.02060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1024, vocab_size=50304,
+    num_experts=64, num_experts_per_tok=8,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke", family="moe",
+        num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=64, vocab_size=257, num_experts=4, num_experts_per_tok=2,
+        dtype="float32", param_dtype="float32",
+    )

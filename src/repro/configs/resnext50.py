@@ -1,0 +1,19 @@
+"""ResNeXt-50 (32x4d) — the paper's own CNN eval model [Xie et al. 2017]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="resnext50", family="cnn",
+    num_layers=16, d_model=0, num_heads=0, num_kv_heads=0, d_ff=0,
+    vocab_size=0, cnn_stage_blocks=(3, 4, 6, 3), cnn_width=64,
+    cnn_cardinality=32, image_size=224, num_classes=1000,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="resnext-smoke", family="cnn",
+        num_layers=0, d_model=0, num_heads=0, num_kv_heads=0, d_ff=0,
+        vocab_size=0, cnn_stage_blocks=(1, 1), cnn_width=8,
+        cnn_cardinality=2, image_size=32, num_classes=10,
+        dtype="float32", param_dtype="float32",
+    )

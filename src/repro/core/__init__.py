@@ -1,0 +1,22 @@
+"""NetFuse core: merged op counterparts, graph merging (paper Alg. 1),
+parameter merging, and serving-strategy baselines."""
+from repro.core import baselines, fused_ops, graph, merge
+from repro.core.fused_ops import (
+    batch_matmul,
+    batch_matmul_concat,
+    batch_to_channel,
+    channel_to_batch,
+    group_norm,
+    grouped_conv2d,
+    merged_batch_norm,
+    merged_embedding,
+    merged_layer_norm,
+)
+from repro.core.graph import Graph, MergeDim, execute, execute_merged, merge_graph
+from repro.core.merge import (
+    add_instance_axis,
+    concat_instances,
+    num_instances,
+    stack_instances,
+    unstack_instances,
+)

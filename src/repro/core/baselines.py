@@ -1,0 +1,98 @@
+"""Serving-strategy baselines from the paper's evaluation (§5.1).
+
+The paper compares NetFuse against three multi-model execution
+strategies on a single GPU.  Their TPU/JAX analogues (see DESIGN.md §2.3
+for the mapping rationale):
+
+* ``sequential``  — one jitted executable, dispatched M times
+  back-to-back with different weights (paper: round-robin, one by one).
+* ``concurrent``  — ONE jitted program containing M independent
+  sub-graphs; XLA is free to overlap them (the JAX analogue of M CUDA
+  processes/streams — single-process runtimes have no 500 MB-per-process
+  base cost, so the paper's OOM failure mode maps to compile-time
+  working-set growth instead).
+* ``hybrid(P)``   — ceil(M/P) sequential rounds of P-way concurrent
+  groups (paper: P processes × M/P sequential models each).
+* ``netfuse``     — stack the M param pytrees and run the fusion-aware
+  forward once (the paper's technique).
+
+All strategies return per-instance outputs in the same order, so tests
+can assert bit-equal results across strategies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import merge as merge_lib
+
+Pytree = Any
+ApplyFn = Callable[..., jax.Array]  # apply(params_with_M_axis, x_with_M_axis)
+
+
+def _single(apply_fn: ApplyFn, params: Pytree, x: jax.Array) -> jax.Array:
+    """Run one instance through the fusion-aware apply (M=1) and drop M."""
+    out = apply_fn(merge_lib.add_instance_axis(params), x[None])
+    return out[0]
+
+
+def sequential(
+    apply_fn: ApplyFn, params_list: Sequence[Pytree], inputs: Sequence[jax.Array]
+) -> list[jax.Array]:
+    """M separate dispatches of one compiled executable."""
+    f = jax.jit(functools.partial(_single, apply_fn))
+    return [f(p, x) for p, x in zip(params_list, inputs)]
+
+
+def concurrent(
+    apply_fn: ApplyFn, params_list: Sequence[Pytree], inputs: Sequence[jax.Array]
+) -> list[jax.Array]:
+    """One program with M independent sub-graphs (XLA may overlap)."""
+
+    @jax.jit
+    def run_all(ps, xs):
+        return [_single(apply_fn, p, x) for p, x in zip(ps, xs)]
+
+    return run_all(list(params_list), list(inputs))
+
+
+def hybrid(
+    apply_fn: ApplyFn,
+    params_list: Sequence[Pytree],
+    inputs: Sequence[jax.Array],
+    *,
+    num_concurrent: int,
+) -> list[jax.Array]:
+    """P-way concurrent groups, dispatched sequentially (paper §5.3)."""
+    out: list[jax.Array] = []
+    p = num_concurrent
+    for i in range(0, len(params_list), p):
+        out.extend(concurrent(apply_fn, params_list[i : i + p], inputs[i : i + p]))
+    return out
+
+
+def netfuse(
+    apply_fn: ApplyFn, params_list: Sequence[Pytree], inputs: Sequence[jax.Array]
+) -> list[jax.Array]:
+    """The paper's technique: merge once, run one fused program."""
+    merged = merge_lib.stack_instances(list(params_list))
+    x = jnp.stack(list(inputs))
+    out = jax.jit(apply_fn)(merged, x)
+    return [out[i] for i in range(len(params_list))]
+
+
+def netfuse_premerged(
+    apply_fn: ApplyFn, merged_params: Pytree, x: jax.Array
+) -> jax.Array:
+    """Steady-state fused call (merging is offline/amortized, paper §4)."""
+    return jax.jit(apply_fn)(merged_params, x)
+
+
+STRATEGIES = {
+    "sequential": sequential,
+    "concurrent": concurrent,
+    "netfuse": netfuse,
+}

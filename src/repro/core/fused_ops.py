@@ -1,0 +1,213 @@
+"""NetFuse merged ("grouped") op counterparts.
+
+Every weighted DNN op has a more general counterpart that supports
+*input-weight local computation* (paper Table 1):
+
+    matmul        -> batch matmul          (concat dim: Batch)
+    convolution   -> grouped convolution   (concat dim: Channel)
+    layer norm    -> group norm            (concat dim: Channel)
+    batch norm    -> batch norm            (concat dim: Channel)
+    elementwise / pooling / activations    (DontCare)
+
+Two equivalent representations of the merged tensors are used throughout
+the codebase:
+
+* **instance-axis form** — merged tensors carry an explicit leading
+  instance axis ``M`` (e.g. activations ``(M, B, S, D)``, weights
+  ``(M, D, F)``).  This is the production path used by the fusion-aware
+  model zoo: XLA sees one batched op per layer instead of M small ones.
+* **concat form** — tensors are concatenated flat along Batch/Channel as
+  in the paper's figures (e.g. ``(M*B, D)`` or ``(..., M*C)``).  This is
+  what the graph-IR merger (:mod:`repro.core.graph`, paper Algorithm 1)
+  produces, matching the paper bit-for-bit.
+
+The functions here implement both forms; converting between the two is a
+reshape (the very reshape Algorithm 1 inserts between Batch-merged and
+Channel-merged ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Matrix multiplication -> batch matrix multiplication  (merge dim: Batch)
+# ---------------------------------------------------------------------------
+
+
+def batch_matmul(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Merged matmul in instance-axis form.
+
+    x: (M, ..., D) — per-instance inputs, w: (M, D, F) — per-instance
+    weights, b: optional (M, F).  Each instance's inputs only ever touch
+    that instance's weights (input-weight local computation).
+    """
+    y = jnp.einsum("m...d,mdf->m...f", x, w)
+    if b is not None:
+        y = y + b.reshape(b.shape[0], *([1] * (y.ndim - 2)), b.shape[-1])
+    return y
+
+
+def batch_matmul_concat(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Merged matmul in concat (paper) form.
+
+    x: (M*B, D) inputs concatenated along the batch dim, w: (M, D, F).
+    Returns (M*B, F).
+    """
+    m = w.shape[0]
+    xb = x.reshape(m, -1, x.shape[-1])          # (M, B, D)
+    y = jnp.einsum("mbd,mdf->mbf", xb, w)
+    if b is not None:
+        y = y + b[:, None, :]
+    return y.reshape(-1, y.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Convolution -> grouped convolution  (merge dim: Channel)
+# ---------------------------------------------------------------------------
+
+
+def grouped_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    groups: int,
+    stride: int | tuple[int, int] = 1,
+    padding: str | tuple = "SAME",
+) -> jax.Array:
+    """Grouped 2-D convolution, NHWC / HWIO layout.
+
+    x: (B, H, W, Cin*G), w: (K, K, Cin, Cout*G).  ``groups`` is the total
+    number of input-weight local groups.  Merging M convs that already
+    use G groups each yields an ``M*G``-group conv (paper §3.1: "merging
+    4 grouped convolutions of 2 groups each -> 8 groups").
+    """
+    if isinstance(stride, int):
+        stride = (stride, stride)
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def merge_conv_weights(ws: list[jax.Array]) -> jax.Array:
+    """Concatenate M conv weights (K,K,Cin,Cout) along Cout -> grouped form."""
+    return jnp.concatenate(ws, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Layer norm -> group norm  (merge dim: Channel)
+# ---------------------------------------------------------------------------
+
+
+def group_norm(
+    x: jax.Array,
+    scale: jax.Array,
+    bias: jax.Array,
+    *,
+    num_groups: int,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Group normalization over the last (channel) axis.
+
+    x: (..., G*C).  Each group of C channels is normalized independently —
+    exactly the semantics needed to merge M layer norms (G = M): instance
+    m's channels are normalized using only instance m's statistics.
+    scale/bias: (G*C,).
+    """
+    *lead, ch = x.shape
+    c = ch // num_groups
+    xg = x.reshape(*lead, num_groups, c)
+    mean = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mean) * lax.rsqrt(var + eps)
+    return xg.reshape(*lead, ch) * scale + bias
+
+
+def merged_layer_norm(
+    x: jax.Array,
+    scale: jax.Array,
+    bias: jax.Array | None,
+    *,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Instance-axis form of the layer-norm merge.
+
+    x: (M, ..., D), scale/bias: (M, D).  Equivalent to group_norm with
+    G=M on the concat form; each instance normalized with its own stats
+    and its own affine params.
+    """
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * lax.rsqrt(var + eps)
+    m, d = scale.shape
+    bshape = (m,) + (1,) * (x.ndim - 2) + (d,)
+    y = y * scale.reshape(bshape)
+    if bias is not None:
+        y = y + bias.reshape(bshape)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Batch norm (inference) — channels concatenate directly
+# ---------------------------------------------------------------------------
+
+
+def merged_batch_norm(
+    x: jax.Array,
+    mean: jax.Array,
+    var: jax.Array,
+    scale: jax.Array,
+    bias: jax.Array,
+    *,
+    eps: float = 1e-5,
+) -> jax.Array:
+    """Inference-mode batch norm; per-channel, so merged weights are just
+    the concatenation of per-instance weights along the channel dim.
+
+    x: (..., C_total); stats/affine: (C_total,).
+    """
+    inv = lax.rsqrt(var + eps) * scale
+    return x * inv + (bias - mean * inv)
+
+
+# ---------------------------------------------------------------------------
+# Embedding lookup (instance-axis form)
+# ---------------------------------------------------------------------------
+
+
+def merged_embedding(ids: jax.Array, table: jax.Array) -> jax.Array:
+    """ids: (M, ...), table: (M, V, D) -> (M, ..., D).
+
+    Each instance's ids index only that instance's table.
+    """
+    return jnp.take_along_axis(
+        table[(slice(None),) + (None,) * (ids.ndim - 1)],  # (M, 1.., V, D)
+        ids[..., None, None],
+        axis=-2,
+    ).squeeze(-2)
+
+
+# ---------------------------------------------------------------------------
+# Form conversion — the reshape Algorithm 1 inserts
+# ---------------------------------------------------------------------------
+
+
+def batch_to_channel(x: jax.Array, m: int) -> jax.Array:
+    """(M*B, ..., D) concat-along-Batch -> (B, ..., M*D) concat-along-Channel."""
+    xb = x.reshape(m, -1, *x.shape[1:])           # (M, B, ..., D)
+    xb = jnp.moveaxis(xb, 0, -2)                  # (B, ..., M, D)
+    return xb.reshape(*xb.shape[:-2], m * x.shape[-1])
+
+
+def channel_to_batch(x: jax.Array, m: int) -> jax.Array:
+    """(B, ..., M*D) concat-along-Channel -> (M*B, ..., D) concat-along-Batch."""
+    d = x.shape[-1] // m
+    xb = x.reshape(*x.shape[:-1], m, d)           # (B, ..., M, D)
+    xb = jnp.moveaxis(xb, -2, 0)                  # (M, B, ..., D)
+    return xb.reshape(-1, *xb.shape[2:])

@@ -1,0 +1,94 @@
+"""Parameter-pytree merging — the production NetFuse path.
+
+In JAX a model is a pure function ``apply(params, *inputs)``.  Merging M
+fine-tuned instances of the same architecture therefore reduces to
+
+  1. stacking the M parameter pytrees along a new leading ``instances``
+     axis (``stack_instances``), and
+  2. running a *fusion-aware* forward in which every weighted op is the
+     input-weight-local counterpart (einsum with a leading ``m`` index,
+     grouped conv, group norm, ...).
+
+The model zoo (:mod:`repro.models`) is written fusion-aware from the
+start: every apply function takes params with a leading ``M`` axis and
+activations shaped ``(M, B, ...)``; ``M=1`` is the plain un-merged model.
+So NetFuse-merging M checkpoints is literally ``stack_instances`` — the
+same trick the paper implements with Torchscript graph surgery.
+
+Also implements the paper §6 *common backbone* case: merge the shared
+backbone, keep per-task heads separate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def stack_instances(params_list: Sequence[Pytree]) -> Pytree:
+    """Stack M per-instance param pytrees along a new leading axis.
+
+    All pytrees must share treedef and leaf shapes (same architecture,
+    different weights — the NetFuse precondition)."""
+    if len(params_list) == 1:
+        return jax.tree.map(lambda x: x[None], params_list[0])
+    treedefs = {jax.tree.structure(p) for p in params_list}
+    if len(treedefs) != 1:
+        raise ValueError(
+            "cannot merge models with different architectures "
+            f"(got {len(treedefs)} distinct param structures)"
+        )
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *params_list)
+
+
+def unstack_instances(merged: Pytree) -> list[Pytree]:
+    """Inverse of :func:`stack_instances`."""
+    m = jax.tree.leaves(merged)[0].shape[0]
+    return [jax.tree.map(lambda x, i=i: x[i], merged) for i in range(m)]
+
+
+def concat_instances(merged_a: Pytree, merged_b: Pytree) -> Pytree:
+    """Merge two already-merged models (M_a + M_b instances) — grouped
+    ops compose, per paper §3.1."""
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), merged_a, merged_b)
+
+
+def add_instance_axis(params: Pytree) -> Pytree:
+    """Lift a plain (un-merged) pytree to the M=1 instance-axis form."""
+    return jax.tree.map(lambda x: x[None], params)
+
+
+def num_instances(merged: Pytree) -> int:
+    return jax.tree.leaves(merged)[0].shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Common-backbone merging (paper §6): shared backbone merged, per-task
+# heads kept separate.
+# ---------------------------------------------------------------------------
+
+
+def merge_backbone_with_heads(
+    backbone_params_list: Sequence[Pytree],
+    head_apply_list: Sequence[Callable[..., jax.Array]],
+    head_params_list: Sequence[Pytree],
+):
+    """Returns (merged backbone params, per_task_heads fn).
+
+    ``per_task_heads(features)`` applies task m's head to features[m]
+    (features: (M, B, ...)).  Heads may have *different* architectures —
+    e.g. different output class counts — which is exactly why they are
+    not merged (paper: "we merge the backbones, but leave the customized
+    layers as-is")."""
+    merged_backbone = stack_instances(list(backbone_params_list))
+
+    def per_task_heads(features: jax.Array) -> list[jax.Array]:
+        return [
+            head_apply_list[m](head_params_list[m], features[m])
+            for m in range(len(head_apply_list))
+        ]
+
+    return merged_backbone, per_task_heads

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (
+    SyntheticLM, MemmapLM, make_vlm_batch, make_audio_batch, write_token_file,
+)

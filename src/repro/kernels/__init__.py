@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the NetFuse hot spots (validated with
+interpret=True on CPU; see ops.py for dispatch)."""
+from repro.kernels import ops, ref

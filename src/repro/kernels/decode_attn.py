@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+The serving hot spot after NetFuse merging: every fused decode step reads
+each instance's KV cache once.  TPU adaptation of flash-decoding: the
+cache's S axis is streamed through VMEM in blocks as the innermost grid
+axis; online-softmax running (max, sum, acc) state lives in VMEM scratch
+across S-steps (grid revisiting pattern), and the per-instance q tile
+(KVH*G x hd — e.g. 32x64) is resident the whole time.
+
+Grid: (M, B, KVH, S/bs).  Masking: prefix-valid cache of length
+kv_len[m, b] (scalar-prefetch operand), block positions via iota.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            ns: int, bs: int, hd: int):
+    si = pl.program_id(3)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0, 0, :, 0].astype(jnp.float32)        # (bs, hd)
+    v = v_ref[0, 0, :, 0].astype(jnp.float32)        # (bs, hd)
+
+    s = jnp.dot(q, k.T) / math.sqrt(hd)              # (G, bs)
+    kv_len = len_ref[0, 0]
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _done():
+        o_ref[0, 0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def _clamp(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_len: jax.Array,
+    *,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (M,B,H,hd); k,v: (M,B,S,KVH,hd); kv_len: (M,B) int32.
+    Returns (M,B,H,hd)."""
+    m, b, h, hd = q.shape
+    s, kvh = k.shape[2], k.shape[3]
+    g = h // kvh
+    bs = _clamp(block_s, s)
+    ns = s // bs
+    grid = (m, b, kvh, ns)
+
+    qg = q.reshape(m, b, kvh, g, hd)
+    kv_len = kv_len.reshape(m, b, 1, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, ns=ns, bs=bs, hd=hd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, 1), lambda mi, bi, ki, si: (mi, bi, 0, 0)),
+            pl.BlockSpec((1, 1, 1, g, hd), lambda mi, bi, ki, si: (mi, bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, bs, 1, hd), lambda mi, bi, ki, si: (mi, bi, si, ki, 0)),
+            pl.BlockSpec((1, 1, bs, 1, hd), lambda mi, bi, ki, si: (mi, bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, g, hd), lambda mi, bi, ki, si: (mi, bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((g, 1), jnp.float32),
+            _vmem((g, 1), jnp.float32),
+            _vmem((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qg, k, v)
+    return out.reshape(m, b, h, hd)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,61 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On this container (CPU) kernels execute with ``interpret=True`` — the
+kernel body runs in Python per grid step, validating BlockSpec indexing
+and in-kernel math; on TPU (the target) set ``REPRO_PALLAS_INTERPRET=0``
+(or pass interpret=False) to compile real Mosaic kernels.  ``use_pallas``
+gates whether the model zoo routes through the kernels or the plain-XLA
+reference path (default: reference — kernels are validated/benched
+explicitly, and the dry-run rooflines stay pure-XLA so the §Perf kernel
+deltas are attributable).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import decode_attention as _decode_attention_pl
+from repro.kernels.fused_matmul import fused_matmul as _fused_matmul_pl
+from repro.kernels.group_norm import group_rms_norm as _group_rms_norm_pl
+from repro.kernels.slstm_cell import slstm_cell as _slstm_cell_pl
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def fused_matmul(x, w, b=None, *, use_pallas: bool = True, **kw):
+    if not use_pallas:
+        return ref.fused_matmul(x, w, b)
+    return _fused_matmul_pl(x, w, b, interpret=_interpret(), **kw)
+
+
+def group_rms_norm(x, scale, *, eps: float = 1e-5, use_pallas: bool = True, **kw):
+    if not use_pallas:
+        return ref.group_rms_norm(x, scale, eps)
+    return _group_rms_norm_pl(x, scale, eps=eps, interpret=_interpret(), **kw)
+
+
+def decode_attention(q, k, v, kv_len, *, use_pallas: bool = True, **kw):
+    if not use_pallas:
+        return ref.decode_attention(q, k, v, kv_len)
+    return _decode_attention_pl(q, k, v, kv_len, interpret=_interpret(), **kw)
+
+
+def slstm_cell(pre, r, state, *, num_heads: int, use_pallas: bool = True, **kw):
+    if not use_pallas:
+        return ref.slstm_cell(pre, r, state, num_heads=num_heads)
+    return _slstm_cell_pl(pre, r, state, num_heads=num_heads,
+                          interpret=_interpret(), **kw)
+
+
+def mlstm_chunkwise(q, k, v, lf, li, *, use_pallas: bool = True, **kw):
+    if not use_pallas:
+        return ref.mlstm_chunkwise(q, k, v, lf, li, **kw)
+    from repro.kernels.mlstm_chunk import mlstm_chunkwise as _pl
+    return _pl(q, k, v, lf, li, interpret=_interpret(), **kw)

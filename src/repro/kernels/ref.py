@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground
+truth for the shape/dtype sweep tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import math
+
+
+def fused_matmul(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """NetFuse merged matmul: x (M,T,D) @ w (M,D,F) [+ b (M,F)] -> (M,T,F).
+
+    Accumulation in f32, result cast back to x.dtype."""
+    y = jnp.einsum(
+        "mtd,mdf->mtf", x, w.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    if b is not None:
+        y = y + b.astype(jnp.float32)[:, None, :]
+    return y.astype(x.dtype)
+
+
+def group_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Merged per-instance RMS norm: x (M,T,D), scale (M,D)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)[:, None, :]
+    return y.astype(x.dtype)
+
+
+def decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array
+) -> jax.Array:
+    """Single-token GQA decode attention.
+
+    q: (M,B,H,hd); k,v: (M,B,S,KVH,hd); kv_len: (M,B) int32 — number of
+    valid cache slots (prefix-valid layout).  Returns (M,B,H,hd) in
+    q.dtype; softmax/accumulation in f32."""
+    m, b, h, hd = q.shape
+    s, kvh = k.shape[2], k.shape[3]
+    g = h // kvh
+    qg = q.reshape(m, b, kvh, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("mbkgd,mbskd->mbkgs", qg, kf) / math.sqrt(hd)
+    mask = jnp.arange(s)[None, None] < kv_len[..., None]       # (M,B,S)
+    scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("mbkgs,mbskd->mbkgd", p, vf)
+    return o.reshape(m, b, h, hd).astype(q.dtype)
+
+
+def slstm_cell(pre: jax.Array, r: jax.Array, state: tuple, *, num_heads: int):
+    """sLSTM scan oracle (mirrors repro.models.ssm.slstm_block's step).
+
+    pre: (M,B,S,4,D); r: (M,4,H,hd,hd); state: (c,n,h,m) each (M,B,D).
+    Returns (hs (M,B,S,D) in h.dtype, (c,n,h,m))."""
+    m, b, s, _, d = pre.shape
+    hh = num_heads
+    hd = d // hh
+    c0, n0, h0, m0 = state
+    rf = r.astype(jnp.float32)
+    out_dtype = h0.dtype
+
+    def step(carry, pre_t):
+        c, n, h, mstab = carry
+        hhd = h.astype(jnp.float32).reshape(m, b, hh, hd)
+        rec = jnp.einsum("mbhd,mghde->mbghe", hhd, rf).reshape(m, b, 4, d)
+        pre_f = pre_t.astype(jnp.float32)
+        zt, it, ft, ot = [pre_f[:, :, j] + rec[:, :, j] for j in range(4)]
+        lf = jax.nn.log_sigmoid(ft)
+        mt = jnp.maximum(lf + mstab, it)
+        fp = jnp.exp(lf + mstab - mt)
+        ip = jnp.exp(it - mt)
+        c_new = fp * c + ip * jnp.tanh(zt)
+        n_new = fp * n + ip
+        h_new = (jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)).astype(out_dtype)
+        return (c_new, n_new, h_new, mt), h_new
+
+    (c, n, h, mst), hs = jax.lax.scan(
+        step, (c0.astype(jnp.float32), n0.astype(jnp.float32), h0, m0.astype(jnp.float32)),
+        jnp.moveaxis(pre, 2, 0),
+    )
+    return jnp.moveaxis(hs, 0, 2), (c, n, h, mst)
+
+
+def mlstm_chunkwise(q, k, v, lf, li, *, chunk: int = 64):
+    """Chunkwise mLSTM oracle — delegates to the model's pure-jnp
+    chunkwise scan (repro.models.ssm.mlstm_sequence), which tests already
+    pin against the per-step recurrence."""
+    from repro.models import ssm
+    h, (c, n, m) = ssm.mlstm_sequence(q, k, v, lf, li, chunk=chunk)
+    return h.astype(q.dtype), (c, n, m)

@@ -1,0 +1,4 @@
+# Launch layer: production meshes, sharding rules, dry-run, HLO roofline
+# analysis, train/serve drivers.  NOTE: repro.launch.dryrun sets
+# XLA_FLAGS for 512 host devices at import — import it only in dry-run
+# entrypoints.

@@ -1,0 +1,538 @@
+"""HLO-text cost model for the roofline analysis.
+
+Why not ``compiled.cost_analysis()``: XLA's built-in analysis counts a
+``while`` body ONCE, so every ``lax.scan`` (layer stacks, flash-attention
+KV streaming, SSM chunk scans) would be undercounted by its trip count —
+verified empirically (scan of 8 matmuls reports the FLOPs of 1).  The
+spec's collective-bytes accounting requires parsing the HLO text anyway,
+so this module walks the optimized HLO and accounts:
+
+* FLOPs — dots (2·prod(out)·prod(contracting)), convolutions, and
+  1-flop-per-element for arithmetic elementwise/reduce ops; ops inside
+  ``while`` bodies are multiplied by ``known_trip_count`` from XLA's
+  backend_config.
+* bytes — first-order HBM traffic, producer-side: each top-level
+  (post-fusion) op writes its result once and that tensor is read ~once
+  downstream (×2), so traffic ≈ 2·Σ result bytes + entry-parameter
+  reads; in-place ops (dynamic-update-slice / scatter) count their
+  UPDATE size, not the aliased full operand (XLA aliases these buffers).
+  Fusion internals stay in registers/VMEM — only the fusion result
+  counts.  ×trip inside loops.
+* collective bytes — operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (×trip), with
+  all-gather counted at result size (that's what moves on the wire).
+
+The model is intentionally a first-order roofline tool, not a cycle
+simulator; see EXPERIMENTS.md §Roofline "method" for its error bars.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_ARITH_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "rsqrt", "sqrt",
+    "tanh", "logistic", "sine", "cosine", "maximum", "minimum", "abs",
+    "negate", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "compare", "select", "clamp", "and", "or",
+    "xor", "not", "atan2", "cbrt", "erf", "remainder",
+    "shift-left", "shift-right-arithmetic", "shift-right-logical",
+}
+
+_DATA_OPS = {
+    "tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "get-dimension-size", "optimization-barrier",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+
+# ---------------------------------------------------------------------------
+# shape parsing
+# ---------------------------------------------------------------------------
+
+
+def _parse_shape(s: str):
+    """'f32[128,64]{1,0}' -> ('f32', [128, 64]); tuples -> list of these."""
+    s = s.strip()
+    if s.startswith("("):
+        # tuple type: split top-level commas
+        inner = s[1:-1] if s.endswith(")") else s[1:]
+        parts, depth, cur = [], 0, []
+        for ch in inner:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            if ch == "," and depth == 0:
+                parts.append("".join(cur))
+                cur = []
+            else:
+                cur.append(ch)
+        if cur:
+            parts.append("".join(cur))
+        return [(_parse_shape(p)) for p in parts if p.strip()]
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", s)
+    if not m:
+        return ("opaque", [])
+    dt = m.group(1)
+    dims = [int(x) for x in m.group(2).split(",") if x] if m.group(2) else []
+    return (dt, dims)
+
+
+def _nbytes(shape) -> int:
+    if isinstance(shape, list):
+        return sum(_nbytes(x) for x in shape)
+    dt, dims = shape
+    n = _DTYPE_BYTES.get(dt, 4)
+    for d in dims:
+        n *= d
+    return n
+
+
+def _nelems(shape) -> int:
+    if isinstance(shape, list):
+        return sum(_nelems(x) for x in shape)
+    _, dims = shape
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: object
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s+=\s+(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+
+
+def _split_type_rest(s: str):
+    """'f32[1,2]{1,0} dot(%a, %b), attrs' -> (shape, opcode, operands, attrs)."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = s[: i + 1], s[i + 1 :].strip()
+    else:
+        sp = s.index(" ")
+        type_str, rest = s[:sp], s[sp + 1 :].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", rest, re.S)
+    if not m:
+        return _parse_shape(type_str), "unknown", [], rest
+    opcode = m.group(1)
+    tail = m.group(2)
+    # operands end at the matching close paren
+    depth, i = 1, 0
+    while i < len(tail) and depth:
+        if tail[i] == "(":
+            depth += 1
+        elif tail[i] == ")":
+            depth -= 1
+        i += 1
+    operand_str, attrs = tail[: i - 1], tail[i:]
+    operands = re.findall(r"%([\w.\-]+)", operand_str)
+    return _parse_shape(type_str), opcode, operands, attrs
+
+
+def parse_hlo(text: str) -> dict[str, list[Op]]:
+    """computation name -> ops."""
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    entry_name = None
+    for line in text.splitlines():
+        if line.startswith((" ", "\t")):
+            m = _OP_RE.match(line)
+            if m and cur is not None:
+                shape, opcode, operands, attrs = _split_type_rest(m.group(2))
+                cur.append(Op(m.group(1), shape, opcode, operands, attrs))
+            continue
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            name = m.group(1)
+            cur = comps.setdefault(name, [])
+            if line.lstrip().startswith("ENTRY"):
+                entry_name = name
+    comps["__entry__"] = comps.get(entry_name, [])
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# cost walk
+# ---------------------------------------------------------------------------
+
+
+def _called(attrs: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(op: Op, shapes: dict[str, object]) -> float:
+    out = _nelems(op.shape)
+    lhs = shapes.get(op.operands[0]) if op.operands else None
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contracted = 1
+    if lhs is not None and not isinstance(lhs, list) and m and m.group(1):
+        for d in m.group(1).split(","):
+            i = int(d)
+            if i < len(lhs[1]):
+                contracted *= lhs[1][i]
+    return 2.0 * out * contracted
+
+
+def _conv_flops(op: Op, shapes: dict[str, object]) -> float:
+    out = _nelems(op.shape)
+    ker = shapes.get(op.operands[1]) if len(op.operands) > 1 else None
+    if ker is None or isinstance(ker, list):
+        return 2.0 * out
+    kelems = 1
+    for d in ker[1]:
+        kelems *= d
+    # kernel elems = spatial * Cin/g * Cout ; per output element work =
+    # 2 * spatial * Cin/g = 2 * kelems / Cout. Find Cout via dim_labels.
+    m = re.search(r"dim_labels=\w+_(\w+)->", op.attrs)
+    cout = 1
+    if m:
+        lab = m.group(1)
+        if "o" in lab:
+            cout = ker[1][lab.index("o")]
+    g = 1
+    mg = re.search(r"feature_group_count=(\d+)", op.attrs)
+    if mg:
+        g = int(mg.group(1))
+    return 2.0 * out * max(kelems / max(cout, 1), 1.0)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k, self.bytes * k, self.collective_bytes * k,
+            {kk: v * k for kk, v in self.collectives.items()},
+        )
+
+
+def _result_bytes(op: Op, shapes: dict, comps: dict | None = None) -> float:
+    """Producer-side traffic for one op (see module docstring)."""
+    if op.opcode == "dynamic-update-slice" and len(op.operands) >= 2:
+        return 2.0 * _nbytes(shapes.get(op.operands[1], ("opaque", [])))
+    if op.opcode == "scatter" and len(op.operands) >= 3:
+        return 2.0 * _nbytes(shapes.get(op.operands[2], ("opaque", [])))
+    if op.opcode == "fusion" and comps is not None:
+        called = _called(op.attrs, "calls")
+        inner = comps.get(called, [])
+        if inner:
+            in_shapes = {o.name: o.shape for o in inner}
+            # XLA emits DUS/scatter fusions in place when the big operand
+            # flows straight to the result (possibly through dtype
+            # converts): only the update slice is written, the buffer is
+            # aliased.  Detect: exactly one DUS/scatter, all other
+            # non-data ops are converts.
+            real = [o for o in inner if o.opcode not in _DATA_OPS]
+            dus = [o for o in real if o.opcode == "dynamic-update-slice"]
+            scat = [o for o in real if o.opcode == "scatter"]
+            others = [
+                o for o in real
+                if o.opcode not in ("dynamic-update-slice", "scatter",
+                                    "convert", "reduce-precision",
+                                    # elementwise companions of an in-place
+                                    # update (assoc-scan tree steps fuse a
+                                    # select/arith into the DUS; XLA emits
+                                    # them in place on the aliased buffer)
+                                    "select", "multiply", "add", "exponential",
+                                    "subtract", "maximum", "broadcast")
+            ]
+            if len(dus) == 1 and not scat and not others and len(dus[0].operands) >= 2:
+                return 2.0 * _nbytes(in_shapes.get(dus[0].operands[1], ("opaque", [])))
+            if len(scat) == 1 and not dus and not others and len(scat[0].operands) >= 3:
+                return 2.0 * _nbytes(in_shapes.get(scat[0].operands[2], ("opaque", [])))
+            # pure dtype-convert fusions are CPU-backend artifacts (oneDNN
+            # wants f32); TPU computes bf16 natively without materializing
+            # the converted buffer -> no HBM traffic.
+            if real and all(o.opcode in ("convert", "reduce-precision") for o in real):
+                return 0.0
+    if op.opcode in ("convert", "reduce-precision"):
+        return 0.0
+    return 2.0 * _nbytes(op.shape)
+
+
+def _comp_cost(
+    comps: dict[str, list[Op]],
+    name: str,
+    *,
+    bytes_mode: bool,
+    memo: dict,
+    is_entry: bool = False,
+) -> Cost:
+    key = (name, bytes_mode, is_entry)
+    if key in memo:
+        return memo[key]
+    memo[key] = Cost()  # cycle guard
+    total = Cost()
+    shapes = {op.name: op.shape for op in comps.get(name, [])}
+    for op in comps.get(name, []):
+        c = Cost()
+        oc = op.opcode
+        if oc == "while":
+            body = _called(op.attrs, "body")
+            cond = _called(op.attrs, "condition")
+            trip = _trip_count(op.attrs)
+            sub = Cost()
+            if body:
+                sub += _comp_cost(comps, body, bytes_mode=bytes_mode, memo=memo)
+            if cond:
+                sub += _comp_cost(comps, cond, bytes_mode=bytes_mode, memo=memo)
+            c = sub.scaled(trip)
+        elif oc == "fusion":
+            called = _called(op.attrs, "calls")
+            if called:
+                inner = _comp_cost(comps, called, bytes_mode=False, memo=memo)
+                c.flops = inner.flops
+                c.collective_bytes = inner.collective_bytes
+                c.collectives = dict(inner.collectives)
+            if bytes_mode:
+                c.bytes = _result_bytes(op, shapes, comps)
+        elif oc in ("call", "async-start", "async-done"):
+            called = _called(op.attrs, "calls") or _called(op.attrs, "to_apply")
+            if called:
+                c = _comp_cost(comps, called, bytes_mode=bytes_mode, memo=memo)
+        elif oc == "conditional":
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", op.attrs)
+            names = []
+            if branches:
+                names = re.findall(r"%?([\w.\-]+)", branches[0])
+            else:
+                for kk in ("true_computation", "false_computation"):
+                    n2 = _called(op.attrs, kk)
+                    if n2:
+                        names.append(n2)
+            subs = [
+                _comp_cost(comps, n2, bytes_mode=bytes_mode, memo=memo) for n2 in names
+            ]
+            if subs:
+                c = max(subs, key=lambda s: s.flops)
+        elif oc == "dot":
+            c.flops = _dot_flops(op, shapes)
+            if bytes_mode:
+                c.bytes = _result_bytes(op, shapes)
+        elif oc == "convolution":
+            c.flops = _conv_flops(op, shapes)
+            if bytes_mode:
+                c.bytes = _result_bytes(op, shapes)
+        elif oc in _COLLECTIVES:
+            base = oc.replace("-start", "")
+            if base == "all-gather":
+                moved = _nbytes(op.shape)   # result moves on the wire
+            else:
+                moved = sum(_nbytes(shapes.get(o, ("opaque", []))) for o in op.operands)
+            c.collective_bytes = moved
+            c.collectives = {base: moved}
+            if bytes_mode:
+                c.bytes = moved
+            called = _called(op.attrs, "to_apply")
+            _ = called  # reduction computation cost negligible
+        elif oc in _DATA_OPS:
+            if bytes_mode and is_entry and oc == "parameter":
+                c.bytes = _nbytes(op.shape)  # weights/caches read from HBM
+        else:
+            # arithmetic / reduce / softmax pieces / gathers etc.
+            if oc in _ARITH_OPS or oc in ("reduce", "reduce-window", "map", "exponential"):
+                c.flops = float(_nelems(op.shape))
+                if oc in ("reduce", "reduce-window"):
+                    c.flops = float(
+                        sum(_nelems(shapes.get(o, ("opaque", []))) for o in op.operands[: max(1, len(op.operands) // 2)])
+                    )
+            elif oc == "sort":
+                n = _nelems(op.shape)
+                c.flops = n * max(1.0, math.log2(max(n, 2)))
+            if bytes_mode and oc not in _DATA_OPS:
+                c.bytes = _result_bytes(op, shapes)
+        total += c
+    memo[key] = total
+    return total
+
+
+def analyze_hlo_text(text: str) -> dict:
+    comps = parse_hlo(text)
+    memo: dict = {}
+    cost = _comp_cost(comps, "__entry__", bytes_mode=True, memo=memo, is_entry=True)
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collectives": cost.collectives,
+    }
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(
+    analysis: dict,
+    *,
+    chips: int,
+    peak_flops: float,
+    hbm_bw: float,
+    ici_bw: float,
+) -> dict:
+    """Per-chip roofline seconds.  The HLO analyzed is the SPMD program of
+    ONE device (GSPMD partitions before backend compilation), so no
+    division by `chips` on flops/bytes; collective bytes are per-device
+    link traffic."""
+    t_compute = analysis["flops"] / peak_flops
+    t_memory = analysis["bytes"] / hbm_bw
+    t_collective = analysis["collective_bytes"] / ici_bw
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bottleneck": dom,
+        "chips": chips,
+    }
+
+
+def breakdown_collectives(text: str, top: int = 25) -> list[tuple[str, float, int]]:
+    """Top collective ops by total moved bytes (×trip-count), labelled with
+    opcode, result shape and the jax op_name metadata — the 'profile' for
+    collective-bound §Perf iterations.  Returns (label, bytes, count)."""
+    comps = parse_hlo(text)
+    acc: dict[str, list[float]] = {}
+
+    def visit(name, mult):
+        shapes = {op.name: op.shape for op in comps.get(name, [])}
+        for op in comps.get(name, []):
+            oc = op.opcode
+            if oc == "while":
+                trip = _trip_count(op.attrs)
+                for key in ("body", "condition"):
+                    c = _called(op.attrs, key)
+                    if c:
+                        visit(c, mult * trip)
+            elif oc in ("call", "async-start", "async-done"):
+                c = _called(op.attrs, "calls") or _called(op.attrs, "to_apply")
+                if c:
+                    visit(c, mult)
+            elif oc == "fusion":
+                c = _called(op.attrs, "calls")
+                if c:
+                    visit(c, mult)
+            elif oc in _COLLECTIVES:
+                base = oc.replace("-start", "")
+                if base == "all-gather":
+                    moved = _nbytes(op.shape)
+                else:
+                    moved = sum(
+                        _nbytes(shapes.get(o, ("opaque", []))) for o in op.operands
+                    )
+                m = re.search(r'op_name="([^"]*)"', op.attrs)
+                src = m.group(1)[-80:] if m else "?"
+                label = f"{base} {str(op.shape)[:40]} <{src}>"
+                e = acc.setdefault(label, [0.0, 0])
+                e[0] += mult * moved
+                e[1] += mult
+
+    visit("__entry__", 1)
+    rows = sorted(((k, v[0], int(v[1])) for k, v in acc.items()), key=lambda r: -r[1])
+    return rows[:top]
+
+
+def breakdown(text: str, top: int = 20) -> list[tuple[str, float, float]]:
+    """Top (op-label, flops, bytes) contributors with trip multipliers —
+    the dry-run 'profile' used by the §Perf iteration loop."""
+    comps = parse_hlo(text)
+    acc: dict[str, list[float]] = {}
+
+    def walk(name, mult, is_entry=False):
+        shapes = {op.name: op.shape for op in comps.get(name, [])}
+        for op in comps.get(name, []):
+            oc = op.opcode
+            if oc == "while":
+                trip = _trip_count(op.attrs)
+                for key in ("body", "condition"):
+                    c = _called(op.attrs, key)
+                    if c:
+                        walk(c, mult * trip)
+            elif oc == "call":
+                c = _called(op.attrs, "calls")
+                if c:
+                    walk(c, mult)
+            elif oc in _DATA_OPS:
+                if is_entry and oc == "parameter":
+                    label = f"parameter {str(op.shape)[:48]}"
+                    acc.setdefault(label, [0.0, 0.0])[1] += _nbytes(op.shape)
+            else:
+                fl = 0.0
+                if oc == "dot":
+                    fl = _dot_flops(op, shapes)
+                elif oc == "fusion":
+                    called = _called(op.attrs, "calls")
+                    if called:
+                        memo: dict = {}
+                        fl = _comp_cost(comps, called, bytes_mode=False, memo=memo).flops
+                by = _result_bytes(op, shapes, comps)
+                label = f"{op.name.split('.')[0]} {str(op.shape)[:48]}"
+                e = acc.setdefault(label, [0.0, 0.0])
+                e[0] += mult * fl
+                e[1] += mult * by
+
+    walk("__entry__", 1, is_entry=True)
+    rows = sorted(
+        ((k, v[0], v[1]) for k, v in acc.items()), key=lambda r: -(r[2])
+    )
+    return rows[:top]

@@ -1,0 +1,153 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Every parameter/cache leaf carries logical axis names (see
+repro.models.common); the mappings below turn them into PartitionSpecs
+with divisibility guards (a dim that doesn't divide its mesh axes is
+replicated — e.g. 8 kv heads on a 16-way model axis, or batch=1 for
+long_500k).
+
+serve rules: tensor parallel over "model", batch/instances over
+("pod",)"data".
+train rules: + FSDP — the params' embed dim additionally shards over
+"data", so AdamW moments (which mirror params) shard too.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import Rules
+
+
+def _batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def serve_rules(mesh) -> Rules:
+    data = _batch_axes(mesh)
+    return Rules(mesh, {
+        "batch": data,
+        "instances": data,          # merged instances are data-parallel
+        "act_embed": None,
+        "embed": None,
+        "heads": "model", "kv_heads": "model",
+        # cache_seq: KV caches shard their context dim over "model"
+        # (Pope et al. flash-decode style — §Perf tinyllama-decode
+        # iteration): attention contracts the local context shard and
+        # combines softmax stats with tiny all-reduces, instead of
+        # all-gathering KV whenever kv_heads doesn't divide the TP axis.
+        # Listed before kv_heads in cache axes tuples, so it claims
+        # "model" first; kv_heads/kv_hd then replicate (axis reuse guard).
+        "cache_seq": "model",
+        # kv_hd: head-dim fallback for caches whose kv_heads don't divide
+        # the model axis (e.g. 8 kv heads on 16-way TP): the spec dedupe
+        # keeps kv_heads when it divides, else the head_dim shards.
+        "kv_hd": "model",
+        "heads_flat": "model", "kv_flat": "model",
+        "mlp": "model", "expert_mlp": None,
+        "experts": "model",
+        # activation constraint inside the MoE dispatch region (moe.py):
+        # "model" = expert-parallel compute, None = DP-compute/weight-gather.
+        "experts_compute": "model",
+        "vocab": "model",
+        "layers": None,
+        # Megatron-style sequence parallelism: the residual stream shards
+        # its seq dim over "model" (norms/elementwise are per-token);
+        # attention and MLP regions constrain seq to None, so GSPMD
+        # inserts the all-gather / reduce-scatter pair at region entry.
+        "seq": "model",
+    })
+
+
+def train_rules(mesh, *, fsdp: bool = True) -> Rules:
+    r = serve_rules(mesh)
+    if fsdp:
+        r.mapping = dict(r.mapping, embed=_batch_axes(mesh))
+    return r
+
+
+def spec_for(rules: Rules, logical, shape=None) -> P:
+    if isinstance(logical, str):
+        logical = [None if p in ("", "none") else p for p in logical.split(",")]
+    return rules.spec(logical, shape)
+
+
+def tree_shardings(rules: Rules, axes_tree: Any, abstract_tree: Any):
+    """Pytree of NamedSharding matching ``abstract_tree``.
+
+    ``axes_tree`` leaves are tuples (param trees) or comma-strings (cache
+    trees)."""
+    is_leaf = lambda x: isinstance(x, (tuple, str)) and not hasattr(x, "_fields")
+
+    def mk(ax, leaf):
+        return NamedSharding(rules.mesh, spec_for(rules, ax, leaf.shape))
+
+    return jax.tree.map(mk, axes_tree, abstract_tree, is_leaf=is_leaf)
+
+
+def batch_shardings(rules: Rules, batch_specs: Any):
+    """Shardings for input batches: dim0=instances, dim1=batch, rest
+    replicated."""
+    def mk(leaf):
+        logical = ["instances", "batch"] + [None] * (len(leaf.shape) - 2)
+        return NamedSharding(rules.mesh, rules.spec(logical, leaf.shape))
+    return jax.tree.map(mk, batch_specs)
+
+
+def replicated(rules: Rules):
+    return NamedSharding(rules.mesh, P())
+
+
+def dp_train_rules(mesh) -> Rules:
+    """Pure data-parallel training for small (<~3B) models: batch over
+    BOTH mesh axes, params replicated (bf16-compute models of this size
+    fit), optimizer moments ZeRO-1-sharded via moments_rules().  §Perf
+    finding: TP=16 Megatron-SP collectives dominate small-model training
+    on a 256-chip pod; trading them for one gradient all-reduce moves the
+    collective term ~10x down."""
+    # "pod" LAST: the suffix-drop divisibility guard (common.Rules.spec)
+    # then keeps global_batch=256 sharded 256-way over (data, model) on the
+    # 2-pod mesh (replicated across pods) instead of replicating everywhere.
+    both = ("data", "model") + (("pod",) if "pod" in mesh.shape else ())
+    return Rules(mesh, {
+        "batch": both,
+        "instances": both,
+        "act_embed": None, "embed": None,
+        "heads": None, "kv_heads": None, "kv_hd": None,
+        "heads_flat": None, "kv_flat": None,
+        "mlp": None, "expert_mlp": None,
+        "experts": None, "vocab": None,
+        "layers": None, "seq": None,
+    })
+
+
+def moe_dp_compute(rules: Rules) -> Rules:
+    """§Perf variant (_moedp): MoE dispatch buffers stay batch-sharded;
+    expert weights are all-gathered per layer instead of all-to-all'ing
+    the (K·cf)x-inflated activation buffers."""
+    return Rules(rules.mesh, dict(rules.mapping, experts_compute=None))
+
+
+def moe_ep_shmap(rules: Rules) -> Rules:
+    """§Perf variant (_moeps): canonical expert parallelism — per-rank
+    expert-window dispatch + local einsums + token-space psum inside one
+    shard_map (moe._moe_mlp_ep_shmap)."""
+    return Rules(rules.mesh, dict(rules.mapping, experts_compute="ep"))
+
+
+def moments_rules(mesh) -> Rules:
+    """ZeRO-1: AdamW moments shard 2-D (embed x model-ish dims) even when
+    params are replicated."""
+    data = _batch_axes(mesh)
+    return Rules(mesh, {
+        "batch": None, "instances": None,
+        "act_embed": None,
+        "embed": data,
+        "heads": "model", "kv_heads": "model", "kv_hd": "model",
+        "heads_flat": "model", "kv_flat": "model",
+        "mlp": "model", "expert_mlp": "model",
+        "experts": "model", "vocab": "model",
+        "layers": None, "seq": None,
+    })

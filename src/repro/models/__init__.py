@@ -1,0 +1,3 @@
+"""Fusion-aware model zoo: every architecture is written with a leading
+NetFuse ``instances`` axis (M=1 == plain model)."""
+from repro.models import audio, cnn, common, dense, encoder, hybrid, layers, moe, ssm, vlm

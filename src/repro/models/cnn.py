@@ -1,0 +1,129 @@
+"""ResNet-50 / ResNeXt-50 — the paper's own CNN evaluation models (§5.1).
+
+These run in the paper's *concat form*: merged activations live as
+(B, H, W, M*C) channel-concatenated tensors and every conv is a grouped
+conv with ``feature_group_count = M * cardinality`` (paper Appendix A),
+batch norms concatenate channels, and the final per-task FC heads stay
+unmerged (paper §6 — each task may have a different class count).
+
+Inference-mode only (the paper evaluates inference); batch norm uses
+stored statistics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fused_ops
+from repro.models.common import Factory, make_factory, param_axes, param_values
+
+
+def stage_widths(cfg: ModelConfig) -> list[tuple[int, int]]:
+    """[(inner, out)] per stage; ResNeXt uses 2x inner width."""
+    mult = 2 if cfg.cnn_cardinality > 1 else 1
+    return [
+        (cfg.cnn_width * (2 ** s) * mult, cfg.cnn_width * 4 * (2 ** s))
+        for s in range(len(cfg.cnn_stage_blocks))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _conv_bn(f: Factory, m: int, k: int, cin: int, cout: int, name_axes=("instances", None, None, None, "mlp")):
+    return {
+        "w": f((m, k, k, cin, cout), name_axes, init="fan_in"),
+        "bn_scale": f((m, cout), ("instances", "mlp"), init="ones"),
+        "bn_bias": f((m, cout), ("instances", "mlp"), init="zeros"),
+        "bn_mean": f((m, cout), ("instances", "mlp"), init="zeros"),
+        "bn_var": f((m, cout), ("instances", "mlp"), init="ones"),
+    }
+
+
+def build_params(cfg: ModelConfig, f: Factory):
+    m = cfg.num_instances
+    card = cfg.cnn_cardinality
+    p = {"stem": _conv_bn(f, m, 7, 3, cfg.cnn_width)}
+    cin = cfg.cnn_width
+    stages = []
+    for si, nblocks in enumerate(cfg.cnn_stage_blocks):
+        inner, cout = stage_widths(cfg)[si]
+        blocks = []
+        for bi in range(nblocks):
+            blk = {
+                "reduce": _conv_bn(f, m, 1, cin, inner),
+                "conv3": _conv_bn(f, m, 3, inner // card, inner),
+                "expand": _conv_bn(f, m, 1, inner, cout),
+            }
+            if bi == 0:
+                blk["down"] = _conv_bn(f, m, 1, cin, cout)
+            blocks.append(blk)
+            cin = cout
+        stages.append(blocks)
+    p["stages"] = stages
+    p["head"] = {"w": f((m, cin, cfg.num_classes), ("instances", "mlp", None), init="fan_in")}
+    return p
+
+
+def init(cfg, key):
+    return param_values(build_params(cfg, make_factory(cfg, key)))
+
+
+def axes(cfg):
+    return param_axes(build_params(cfg, make_factory(cfg, abstract=True)))
+
+
+# ---------------------------------------------------------------------------
+# forward (concat form)
+# ---------------------------------------------------------------------------
+
+
+def _to_concat(x):
+    """(M,B,H,W,C) -> (B,H,W,M*C)."""
+    m, b, h, w, c = x.shape
+    return jnp.moveaxis(x, 0, 3).reshape(b, h, w, m * c)
+
+
+def _conv_bn_relu(p, x, m, *, stride=1, groups=1, relu=True):
+    """x: (B,H,W,M*Cin); weights stored (M,K,K,Cin/g,Cout)."""
+    w = jnp.moveaxis(p["w"], 0, 3)                             # (K,K,Cin/g,M,Cout)
+    w = w.reshape(*w.shape[:2], w.shape[2], -1)                # (K,K,Cin/g,M*Cout)
+    y = fused_ops.grouped_conv2d(x, w, groups=m * groups, stride=stride)
+    y = fused_ops.merged_batch_norm(
+        y, p["bn_mean"].reshape(-1), p["bn_var"].reshape(-1),
+        p["bn_scale"].reshape(-1), p["bn_bias"].reshape(-1),
+    )
+    return jax.nn.relu(y) if relu else y
+
+
+def forward(cfg: ModelConfig, params, images) -> list[jax.Array]:
+    """images: (M,B,H,W,3). Returns per-task logits list (paper §6:
+    backbone merged, task heads separate)."""
+    m = images.shape[0]
+    card = cfg.cnn_cardinality
+    x = _to_concat(images)
+    x = _conv_bn_relu(params["stem"], x, m, stride=2)
+    x = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    for si, blocks in enumerate(params["stages"]):
+        for bi, blk in enumerate(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            res = x
+            y = _conv_bn_relu(blk["reduce"], x, m)
+            y = _conv_bn_relu(blk["conv3"], y, m, stride=stride, groups=card)
+            y = _conv_bn_relu(blk["expand"], y, m, relu=False)
+            if "down" in blk:
+                res = _conv_bn_relu(blk["down"], x, m, stride=stride, relu=False)
+            x = jax.nn.relu(y + res)
+    feats = jnp.mean(x, axis=(1, 2))                           # (B, M*C)
+    b = feats.shape[0]
+    c = feats.shape[1] // m
+    feats = feats.reshape(b, m, c)
+    # unmerged per-task heads
+    return [
+        feats[:, i] @ params["head"]["w"][i] for i in range(m)
+    ]

@@ -1,0 +1,243 @@
+"""Shared utilities for the fusion-aware model zoo.
+
+Conventions (see DESIGN.md §2.1):
+
+* every parameter tensor carries a leading ``instances`` axis ``M``
+  (NetFuse-merged fine-tuned instances; M=1 is the plain model),
+* activations are ``(M, B, ...)`` — per-instance batches,
+* layer stacks are stacked along a leading ``L`` axis and executed with
+  ``lax.scan``,
+* every param is built together with its *logical sharding axes* so the
+  launcher can derive PartitionSpecs (MaxText-style logical axis rules).
+
+``build_params(cfg, factory)`` functions return a pytree whose leaves are
+:class:`PA` (value + logical axes).  ``factory`` decides whether values
+are real random arrays (init) or ShapeDtypeStructs (abstract init for the
+multi-pod dry-run — no host allocation for 67B-param models).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PA:
+    """A parameter leaf: value + logical sharding axes (one name per dim,
+    None = replicated dim)."""
+    value: Any
+    axes: tuple[str | None, ...]
+
+
+def _is_pa(x) -> bool:
+    return isinstance(x, PA)
+
+
+def param_values(tree):
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=_is_pa)
+
+
+def param_axes(tree):
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_pa)
+
+
+class Factory:
+    """Creates parameter leaves; real or abstract."""
+
+    def __init__(self, key: jax.Array | None, dtype=jnp.float32, abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def __call__(
+        self,
+        shape: Sequence[int],
+        axes: tuple[str | None, ...],
+        *,
+        init: str = "normal",
+        scale: float = 0.02,
+    ) -> PA:
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(axes), f"shape {shape} vs axes {axes}"
+        if self.abstract:
+            return PA(jax.ShapeDtypeStruct(shape, self.dtype), tuple(axes))
+        if init == "zeros":
+            v = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            v = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            s = scale if scale else 1.0 / np.sqrt(fan_in)
+            v = (jax.random.normal(self._next_key(), shape) * s).astype(self.dtype)
+        elif init == "fan_in":
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            v = (jax.random.normal(self._next_key(), shape) / np.sqrt(fan_in)).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        return PA(v, tuple(axes))
+
+
+def make_factory(cfg, key=None, abstract: bool = False) -> Factory:
+    dtype = jnp.dtype(cfg.param_dtype)
+    return Factory(key, dtype=dtype, abstract=abstract)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding constraints for activations
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: "Rules | None" = None
+
+
+class Rules:
+    """Maps logical axis names -> mesh axis names, with divisibility checks."""
+
+    def __init__(self, mesh, mapping: dict[str, Any]):
+        self.mesh = mesh
+        self.mapping = mapping  # logical -> mesh axis (str | tuple | None)
+
+    def _axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        n = 1
+        for a in mesh_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, logical: Sequence[str | None], shape: Sequence[int] | None = None):
+        from jax.sharding import PartitionSpec as P
+
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            mesh_axes = self.mapping.get(name) if name else None
+            if mesh_axes is not None and shape is not None:
+                # progressive suffix-drop: if the dim doesn't divide the
+                # full axis tuple, retry with trailing axes removed (e.g.
+                # global_batch=256 on ("data","model","pod")=512 devices
+                # still shards 256-way over ("data","model") instead of
+                # replicating outright).
+                flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+                while flat and shape[i] % self._axis_size(flat) != 0:
+                    flat = flat[:-1]
+                mesh_axes = flat or None
+            if mesh_axes is not None:
+                flat = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+                if any(a in used for a in flat):
+                    mesh_axes = None  # a mesh axis may appear once per spec
+                else:
+                    used.update(flat)
+            parts.append(mesh_axes)
+        return P(*parts)
+
+    def __enter__(self):
+        global _ACTIVE_RULES
+        self._prev = _ACTIVE_RULES
+        _ACTIVE_RULES = self
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_RULES
+        _ACTIVE_RULES = self._prev
+
+
+def active_rules() -> "Rules | None":
+    """The Rules currently in scope (None in plain CPU tests)."""
+    return _ACTIVE_RULES
+
+
+def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply a sharding constraint if logical rules are active (no-op in
+    plain CPU tests)."""
+    if _ACTIVE_RULES is None:
+        return x
+    spec = _ACTIVE_RULES.spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def stack_layer_params(layer_trees: list):
+    """Stack per-layer PA-trees along a leading L axis (for lax.scan)."""
+    def _stack(*ps):
+        vals = [p.value for p in ps]
+        if isinstance(vals[0], jax.ShapeDtypeStruct):
+            v = jax.ShapeDtypeStruct((len(vals),) + vals[0].shape, vals[0].dtype)
+        else:
+            v = jnp.stack(vals)
+        return PA(v, ("layers",) + ps[0].axes)
+    return jax.tree.map(_stack, *layer_trees, is_leaf=_is_pa)
+
+
+def count_params(params) -> int:
+    """Total parameter count (excluding the instances axis)."""
+    tot = 0
+    for leaf in jax.tree.leaves(params):
+        n = int(np.prod(leaf.shape))
+        tot += n
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# NetFuse merging of whole-model checkpoints
+# ---------------------------------------------------------------------------
+#
+# Layer-stacked leaves are (L, M, ...) while top-level leaves are (M, ...);
+# the ``axes`` tree records where the instances axis sits, so merging M
+# fine-tuned checkpoints (each built with num_instances=1) stacks each leaf
+# at the right position.
+
+
+def _inst_axis(ax: tuple) -> int:
+    return ax.index("instances")
+
+
+_is_axes_leaf = lambda x: isinstance(x, tuple)
+
+
+def merge_instances(params_list: list, axes_tree):
+    """NetFuse-merge M single-instance checkpoints -> one merged pytree."""
+    def _m(ax, *leaves):
+        i = _inst_axis(ax)
+        return jnp.concatenate(leaves, axis=i)
+    return jax.tree.map(_m, axes_tree, *params_list, is_leaf=_is_axes_leaf)
+
+
+def split_instances(params, axes_tree):
+    """Inverse of merge_instances: merged pytree -> list of M=1 pytrees."""
+    n = None
+    def _probe(ax, leaf):
+        nonlocal n
+        n = leaf.shape[_inst_axis(ax)]
+        return leaf
+    jax.tree.map(_probe, axes_tree, params, is_leaf=_is_axes_leaf)
+    out = []
+    for i in range(n):
+        out.append(
+            jax.tree.map(
+                lambda ax, l, i=i: jnp.take(l, jnp.array([i]), axis=_inst_axis(ax)),
+                axes_tree, params, is_leaf=_is_axes_leaf,
+            )
+        )
+    return out
+
+
+def take_instance(params, axes_tree, i: int):
+    """Slice instance i (keeping M=1) from a merged pytree."""
+    return jax.tree.map(
+        lambda ax, l: jnp.take(l, jnp.array([i]), axis=_inst_axis(ax)),
+        axes_tree, params, is_leaf=_is_axes_leaf,
+    )

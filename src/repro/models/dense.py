@@ -1,0 +1,220 @@
+"""Dense llama-family decoder (tinyllama, deepseek-67b, granite-3-2b,
+qwen1.5-0.5b; also the LM trunk reused by the VLM family).
+
+Fusion-aware: params carry a leading instances axis M; tokens are
+(M, B, S) with per-instance batches.  Layer stack runs under lax.scan
+over params stacked on a leading L axis.
+
+Entry points:
+  forward(cfg, params, tokens)                      -> logits (M,B,S,V)
+  prefill(cfg, params, tokens)                      -> (last logits, KVCache)
+  decode_step(cfg, params, cache, tokens, pos)      -> (logits, KVCache)
+
+``cfg.sliding_window > 0`` switches every layer to sliding-window
+attention (the sub-quadratic variant used for the long_500k shape); the
+decode cache is then a ring buffer of window size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import (
+    Factory,
+    constrain,
+    make_factory,
+    param_axes,
+    param_values,
+    stack_layer_params,
+)
+from repro.models.layers import KVCache
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _layer_params(cfg: ModelConfig, f: Factory):
+    m, d, h, kvh, hd, ff = (
+        cfg.num_instances, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+        cfg.head_dim, cfg.d_ff,
+    )
+    p = {
+        "attn_norm": f((m, d), ("instances", None), init="ones"),
+        "wq": f((m, d, h * hd), ("instances", "embed", "heads_flat"), init="fan_in"),
+        "wk": f((m, d, kvh * hd), ("instances", "embed", "kv_flat"), init="fan_in"),
+        "wv": f((m, d, kvh * hd), ("instances", "embed", "kv_flat"), init="fan_in"),
+        "wo": f((m, h * hd, d), ("instances", "heads_flat", "embed"), init="fan_in"),
+        "mlp_norm": f((m, d), ("instances", None), init="ones"),
+        "w_gate": f((m, d, ff), ("instances", "embed", "mlp"), init="fan_in"),
+        "w_up": f((m, d, ff), ("instances", "embed", "mlp"), init="fan_in"),
+        "w_down": f((m, ff, d), ("instances", "mlp", "embed"), init="fan_in"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = f((m, h * hd), ("instances", "heads_flat"), init="zeros")
+        p["bk"] = f((m, kvh * hd), ("instances", "kv_flat"), init="zeros")
+        p["bv"] = f((m, kvh * hd), ("instances", "kv_flat"), init="zeros")
+    return p
+
+
+def build_params(cfg: ModelConfig, f: Factory):
+    m, d, v = cfg.num_instances, cfg.d_model, cfg.vocab_size
+    layers = stack_layer_params([_layer_params(cfg, f) for _ in range(cfg.num_layers)])
+    p = {
+        "embed": f((m, v, d), ("instances", "vocab", "embed")),
+        "layers": layers,
+        "final_norm": f((m, d), ("instances", None), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = f((m, d, v), ("instances", "embed", "vocab"), init="fan_in")
+    return p
+
+
+def init(cfg: ModelConfig, key):
+    return param_values(build_params(cfg, make_factory(cfg, key)))
+
+
+def abstract_params(cfg: ModelConfig):
+    return param_values(build_params(cfg, make_factory(cfg, abstract=True)))
+
+
+def axes(cfg: ModelConfig):
+    return param_axes(build_params(cfg, make_factory(cfg, abstract=True)))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp(cfg: ModelConfig, lp, x, positions, *, window, cache=None, decode_pos=None):
+    """One transformer block; returns (x, new_cache_layer)."""
+    n = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    h, new_cache = L.gqa_attention(
+        n, lp,
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        positions=positions, window=window, cache=cache, decode_pos=decode_pos,
+    )
+    x = x + h
+    n = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + L.swiglu_mlp(n, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return x, new_cache
+
+
+def _positions(tokens):
+    m, b, s = tokens.shape
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (m, b, s))
+
+
+def _embed_in(cfg, params, tokens):
+    x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
+    return constrain(x, "instances", "batch", "seq", "act_embed")
+
+
+def _logits(cfg, params, x):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if not cfg.tie_embeddings else jnp.swapaxes(params["embed"], -1, -2)
+    return L.unembed(x, head)
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens,
+    *,
+    inputs_embeds=None,
+    positions=None,
+    remat: bool = False,
+) -> jax.Array:
+    """Full-sequence forward (training / evaluation). Returns (M,B,S,V)."""
+    x = _embed_in(cfg, params, tokens) if inputs_embeds is None else inputs_embeds
+    positions = _positions(tokens) if positions is None else positions
+    window = cfg.sliding_window
+
+    def body(xc, lp):
+        out, _ = _attn_mlp(cfg, lp, xc, positions, window=window)
+        return out, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["layers"])
+    return _logits(cfg, params, x)
+
+
+def prefill(cfg: ModelConfig, params, tokens, *, cache_len: int | None = None):
+    """Process a full prompt; returns (logits for last position, KVCache).
+
+    The returned cache has length ``cache_len`` (defaults to the window
+    size for sliding-window models, else the prompt length) and is laid
+    out ring-buffer-consistently so decode can continue at pos = S."""
+    m, b, s = tokens.shape
+    x = _embed_in(cfg, params, tokens)
+    positions = _positions(tokens)
+    window = cfg.sliding_window
+    if cache_len is None:
+        cache_len = window if window else s
+
+    def body(xc, lp):
+        n = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        # recompute k/v for cache extraction: run attention and also emit k,v
+        q = L.linear(n, lp["wq"], lp.get("bq")).reshape(m, b, s, cfg.num_heads, cfg.head_dim)
+        k = L.linear(n, lp["wk"], lp.get("bk")).reshape(m, b, s, cfg.num_kv_heads, cfg.head_dim)
+        v = L.linear(n, lp["wv"], lp.get("bv")).reshape(m, b, s, cfg.num_kv_heads, cfg.head_dim)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = L.flash_attention(q, k, v, positions, positions, window=window)
+        h = L.linear(o.reshape(m, b, s, -1), lp["wo"], lp.get("bo"))
+        xc = xc + h
+        nn = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = xc + L.swiglu_mlp(nn, lp["w_gate"], lp["w_up"], lp["w_down"])
+        if cache_len >= s:
+            pad = cache_len - s
+            kc = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            assert s % cache_len == 0, "prompt must be a multiple of the window"
+            kc, vc = k[:, :, s - cache_len :], v[:, :, s - cache_len :]
+        return xc, (kc.astype(jnp.dtype(cfg.dtype)), vc.astype(jnp.dtype(cfg.dtype)))
+
+    x, (ck, cv) = lax.scan(body, x, params["layers"])
+    logits = _logits(cfg, params, x[:, :, -1:])[:, :, 0]
+    return logits, KVCache(k=ck, v=cv)
+
+
+def decode_step(cfg: ModelConfig, params, cache: KVCache, tokens, pos):
+    """One decode step. tokens (M,B,1); pos (M,B) = index of this token.
+    Returns (logits (M,B,V), updated cache)."""
+    x = _embed_in(cfg, params, tokens)
+    positions = pos[..., None]
+    window = cfg.sliding_window
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        out, new_cache = _attn_mlp(
+            cfg, lp, xc, positions, window=window, cache=(ck, cv), decode_pos=pos
+        )
+        return out, new_cache
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    logits = _logits(cfg, params, x)[:, :, 0]
+    return logits, KVCache(k=nk, v=nv)
+
+
+def make_cache(cfg: ModelConfig, m: int, b: int, context_len: int) -> KVCache:
+    s_cache = cfg.sliding_window if cfg.sliding_window else context_len
+    return L.make_kv_cache(
+        cfg.num_layers, m, b, s_cache, cfg.num_kv_heads, cfg.head_dim,
+        jnp.dtype(cfg.dtype),
+    )
+
+
+def cache_axes(cfg: ModelConfig):
+    ax = ("layers", "instances", "batch", "cache_seq", "kv_heads", "kv_hd")
+    return KVCache(k=ax, v=ax)

@@ -1,0 +1,131 @@
+"""BERT / XLNet-style encoders — the paper's NLP evaluation models (§5.1).
+
+Instance-axis fusion-aware form: all matmuls are instance-batched
+(matmul -> batch-matmul merge) and all layer norms are per-instance
+normalized (layer-norm -> group-norm merge).  The paper evaluates these
+at sequence length 128 with per-task FC heads left unmerged.
+
+The XLNet variant uses Transformer-XL relative-position attention
+(content + position terms with the u/v biases and the relative-shift
+trick) — the "extra computations" the paper cites when explaining why
+the concurrent baseline degrades most on XLNet.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.common import (
+    Factory, make_factory, param_axes, param_values, stack_layer_params,
+)
+
+
+def _layer(cfg: ModelConfig, f: Factory, xlnet: bool):
+    m, d, h, hd, ff = (
+        cfg.num_instances, cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.d_ff,
+    )
+    p = {
+        "wq": f((m, d, h * hd), ("instances", "embed", "heads_flat"), init="fan_in"),
+        "wk": f((m, d, h * hd), ("instances", "embed", "heads_flat"), init="fan_in"),
+        "wv": f((m, d, h * hd), ("instances", "embed", "heads_flat"), init="fan_in"),
+        "wo": f((m, h * hd, d), ("instances", "heads_flat", "embed"), init="fan_in"),
+        "ln1_s": f((m, d), ("instances", None), init="ones"),
+        "ln1_b": f((m, d), ("instances", None), init="zeros"),
+        "w1": f((m, d, ff), ("instances", "embed", "mlp"), init="fan_in"),
+        "b1": f((m, ff), ("instances", "mlp"), init="zeros"),
+        "w2": f((m, ff, d), ("instances", "mlp", "embed"), init="fan_in"),
+        "b2": f((m, d), ("instances", "embed"), init="zeros"),
+        "ln2_s": f((m, d), ("instances", None), init="ones"),
+        "ln2_b": f((m, d), ("instances", None), init="zeros"),
+    }
+    if xlnet:
+        p["wr"] = f((m, d, h * hd), ("instances", "embed", "heads_flat"), init="fan_in")
+        p["u"] = f((m, h, hd), ("instances", "heads", None), init="zeros")
+        p["v"] = f((m, h, hd), ("instances", "heads", None), init="zeros")
+    return p
+
+
+def build_params(cfg: ModelConfig, f: Factory, *, xlnet: bool = False):
+    m, d, v = cfg.num_instances, cfg.d_model, cfg.vocab_size
+    max_pos = cfg.max_target_positions or 512
+    p = {
+        "embed": f((m, v, d), ("instances", "vocab", "embed")),
+        "layers": stack_layer_params(
+            [_layer(cfg, f, xlnet) for _ in range(cfg.num_layers)]
+        ),
+    }
+    if not xlnet:
+        p["pos_embed"] = f((m, max_pos, d), ("instances", None, "embed"))
+    return p
+
+
+def init(cfg, key, *, xlnet=False):
+    return param_values(build_params(cfg, make_factory(cfg, key), xlnet=xlnet))
+
+
+def axes(cfg, *, xlnet=False):
+    return param_axes(build_params(cfg, make_factory(cfg, abstract=True), xlnet=xlnet))
+
+
+def _sinusoid_rel(s: int, d: int) -> np.ndarray:
+    """Transformer-XL relative positions s-1 .. 0 encoded sinusoidally."""
+    pos = np.arange(s - 1, -1, -1)[:, None]
+    inv = 1.0 / (10000 ** (np.arange(0, d, 2) / d))
+    ang = pos * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+def _rel_shift(x):
+    """(..., S_q, S_k) relative-score shift (Transformer-XL trick)."""
+    *lead, sq, sk = x.shape
+    x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, 0), (1, 0)])
+    x = x.reshape(*lead, sk + 1, sq)
+    return x[..., 1:, :].reshape(*lead, sq, sk)
+
+
+def _attention(cfg, lp, x, *, xlnet: bool, rel_enc=None):
+    """Bidirectional MHA at S<=512 (paper setting) — direct S×S scores."""
+    m, b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = L.linear(x, lp["wq"]).reshape(m, b, s, h, hd)
+    k = L.linear(x, lp["wk"]).reshape(m, b, s, h, hd)
+    v = L.linear(x, lp["wv"]).reshape(m, b, s, h, hd)
+    if xlnet:
+        r = jnp.einsum("sd,mdf->msf", rel_enc, lp["wr"].astype(jnp.float32))
+        r = r.reshape(m, s, h, hd)
+        ac = jnp.einsum("mbqhd,mbkhd->mbhqk",
+                        q + lp["u"][:, None, None].astype(q.dtype), k)
+        bd = jnp.einsum("mbqhd,mkhd->mbhqk",
+                        q + lp["v"][:, None, None].astype(q.dtype), r.astype(q.dtype))
+        scores = (ac + _rel_shift(bd)) / np.sqrt(hd)
+    else:
+        scores = jnp.einsum("mbqhd,mbkhd->mbhqk", q, k) / np.sqrt(hd)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("mbhqk,mbkhd->mbqhd", p, v).reshape(m, b, s, h * hd)
+    return L.linear(o, lp["wo"])
+
+
+def forward(cfg: ModelConfig, params, tokens, *, xlnet: bool = False):
+    """tokens (M,B,S) -> final hidden states (M,B,S,D) (post-LN stack)."""
+    m, b, s = tokens.shape
+    x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
+    rel_enc = None
+    if xlnet:
+        rel_enc = jnp.asarray(_sinusoid_rel(s, cfg.d_model))
+    else:
+        x = x + params["pos_embed"][:, None, :s].astype(x.dtype)
+
+    def body(xc, lp):
+        a = _attention(cfg, lp, xc, xlnet=xlnet, rel_enc=rel_enc)
+        xc = L.layer_norm(xc + a, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        f = L.gelu_mlp(xc, lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        xc = L.layer_norm(xc + f, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        return xc, None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    return x

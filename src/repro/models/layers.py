@@ -1,0 +1,502 @@
+"""Fusion-aware neural-net primitives.
+
+All ops here are the NetFuse *input-weight-local* counterparts operating
+in instance-axis form: activations ``(M, B, ...)``, weights with leading
+``M``.  With M=1 they reduce to the ordinary ops; with M>1 each instance's
+inputs only ever touch that instance's weights (paper §3.1).
+
+Attention is a chunked online-softmax ("flash") implementation: queries
+are processed in static chunks (python loop at trace time), keys/values
+streamed with ``lax.scan`` — S×S score matrices are never materialized,
+which is what makes the 32k-prefill and 512k-decode shapes lowerable.
+Masking is positional: ``q_pos``/``kv_pos`` arrays encode causality,
+sliding windows and ring-buffer cache validity in one rule.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import fused_ops
+from repro.models.common import active_rules, constrain
+
+# ---------------------------------------------------------------------------
+# basic ops
+# ---------------------------------------------------------------------------
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Merged matmul: x (M, ..., D) @ w (M, D, F)  [+ b (M, F)]."""
+    y = jnp.einsum("m...d,mdf->m...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype).reshape(b.shape[0], *([1] * (y.ndim - 2)), b.shape[-1])
+    return y
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """x (M, ..., D), scale (M, D). Stats in f32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    m, d = scale.shape
+    s = scale.astype(jnp.float32).reshape((m,) + (1,) * (x.ndim - 2) + (d,))
+    return (y * s).astype(x.dtype)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array | None, eps: float = 1e-5
+) -> jax.Array:
+    """Merged layer norm == group norm with G=M (instance-axis form)."""
+    xf = x.astype(jnp.float32)
+    y = fused_ops.merged_layer_norm(
+        xf, scale.astype(jnp.float32),
+        bias.astype(jnp.float32) if bias is not None else None, eps=eps,
+    )
+    return y.astype(x.dtype)
+
+
+def embed(ids: jax.Array, table: jax.Array, dtype) -> jax.Array:
+    """ids (M, B, S), table (M, V, D) -> (M, B, S, D)."""
+    return fused_ops.merged_embedding(ids, table).astype(dtype)
+
+
+def unembed(x: jax.Array, table_or_head: jax.Array) -> jax.Array:
+    """Logits in f32: x (M,B,S,D), head (M,D,V) -> (M,B,S,V)."""
+    return jnp.einsum(
+        "mbsd,mdv->mbsv", x.astype(jnp.float32), table_or_head.astype(jnp.float32)
+    )
+
+
+def swiglu_mlp(x, wg, wu, wd):
+    h = jax.nn.silu(linear(x, wg)) * linear(x, wu)
+    h = constrain(h, "instances", "batch", None, "mlp")
+    return linear(h, wd)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(linear(x, w1, b1))
+    h = constrain(h, "instances", "batch", None, "mlp")
+    return linear(h, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x (M,B,S,H,hd), pos (M,B,S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs          # (M,B,S,half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)          # (M,B,S,1,half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_pos: jax.Array,
+    *,
+    window: int | jax.Array = 0,
+    sink: int = 0,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """GQA attention without materializing S_q x S_kv.
+
+    q: (M,B,Sq,H,hd); k,v: (M,B,Skv,KVH,hd); q_pos: (M,B,Sq) int32;
+    kv_pos: (M,B,Skv) int32 with -1 marking invalid (empty cache) slots.
+    Mask: valid & (kv_pos <= q_pos if causal) & (q_pos - kv_pos < window
+    if window).  ``window`` may be a traced scalar (per-layer windows under
+    lax.scan — hybrid models); ``sink`` exempts the first ``sink``
+    positions from the window (attention sinks / Hymba meta tokens).
+
+    Distribution (§Perf qwen1.5-prefill iterations): when sharding rules
+    are active and Sq>1, the chunked streaming runs under ``jax.shard_map``
+    over (batch axes, q-heads->"model") — GSPMD replicates while-loop
+    operands whose head dims are sharded (every scan/slice formulation we
+    tried re-gathered the KV per loop), so the scan must be device-local.
+    KV heads ride along sharded when KVH divides the axis; otherwise each
+    rank slices the kv-head group(s) backing its local q heads.  Decode
+    (Sq=1) instead relies on GSPMD with the context-sharded cache: one KV
+    block, softmax stats combined with tiny all-reduces.
+    """
+    rules = active_rules()
+    m, b, sq, h, hd = q.shape
+    kvh = k.shape[3]
+    g = h // kvh
+    if rules is not None and sq > 1:
+        nm = dict(rules.mesh.shape).get("model", 1)
+        h_l = h // nm if h % nm == 0 else 0
+        aligned = h_l > 0 and (g % h_l == 0 or h_l % g == 0)
+        q_spec = rules.spec(("instances", "batch", None, "heads", None), q.shape)
+        if aligned and q_spec[3] == "model":
+            kv_div = kvh % nm == 0
+            if not kv_div:
+                # Expand KV to query heads so the head dim shards fully
+                # local (replicating whole KV per rank costs more HBM than
+                # the g-fold expansion sliced 1/nm ways: per-rank bytes go
+                # kvh·hd -> h_l·hd, a win whenever h_l < kvh·nm ... i.e.
+                # always, since h_l·nm = h = g·kvh ≥ kvh).
+                k = jnp.repeat(k, g, axis=3)
+                v = jnp.repeat(v, g, axis=3)
+            kv_spec = rules.spec(
+                ("instances", "batch", None,
+                 "heads" if not kv_div else "kv_heads", None),
+                k.shape,
+            )
+            pos_spec = rules.spec(("instances", "batch", None), q_pos.shape)
+
+            def body(q_l, k_l, v_l, qp_l, kp_l):
+                return _flash_body(
+                    q_l, k_l, v_l, qp_l, kp_l, window=window, sink=sink,
+                    causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                )
+
+            return jax.shard_map(
+                body, mesh=rules.mesh,
+                in_specs=(q_spec, kv_spec, kv_spec, pos_spec, pos_spec),
+                out_specs=q_spec, check_vma=False,
+            )(q, k, v, q_pos, kv_pos)
+    return _flash_body(
+        q, k, v, q_pos, kv_pos, window=window, sink=sink, causal=causal,
+        q_chunk=q_chunk, kv_chunk=kv_chunk,
+    )
+
+
+def _flash_body(
+    q, k, v, q_pos, kv_pos, *, window, sink, causal, q_chunk, kv_chunk
+) -> jax.Array:
+    """Chunked online-softmax attention on (possibly shard_map-local)
+    arrays — see flash_attention."""
+    m, b, sq, h, hd = q.shape
+    skv, kvh = k.shape[2], k.shape[3]
+    g = h // kvh
+    use_window = isinstance(window, jax.Array) or window > 0
+    qc = _pick_chunk(sq, q_chunk)
+    # Single-token decode: one KV block over the whole cache.  The scan's
+    # per-chunk dynamic-slice would otherwise walk the cache's context dim,
+    # which is sharded over "model" (cache_seq rule) — GSPMD can't partition
+    # a loop-varying slice of a sharded dim and would all-gather the KV
+    # every chunk (§Perf tinyllama-decode iteration).  With one block, the
+    # score/attend einsums contract the *local* context shard and GSPMD
+    # combines the softmax stats with tiny all-reduces.  At Sq=1 the score
+    # tensor is only (M,B,H,Skv) so nothing needs streaming.
+    kc = skv if sq == 1 else _pick_chunk(skv, kv_chunk)
+    n_q, n_kv = sq // qc, skv // kc
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(m, b, sq, kvh, g, hd)
+    # Pre-chunk the KV stream once.  This body runs either with no rules
+    # (plain CPU tests) or as the LOCAL program inside flash_attention's
+    # shard_map — never under GSPMD with sharded head dims, where every
+    # chunked formulation we tried (per-q-chunk slices, in-body
+    # dynamic-slice, shared xs, nested scan) re-gathered or replicated the
+    # KV per while loop (§Perf qwen1.5-prefill iterations).
+    k_ch = k.reshape(m, b, n_kv, kc, kvh, hd)
+    v_ch = v.reshape(m, b, n_kv, kc, kvh, hd)
+    kp_ch = kv_pos.reshape(m, b, n_kv, kc)
+
+    out_chunks = []
+    for qi in range(n_q):
+        q_blk = qg[:, :, qi * qc : (qi + 1) * qc]              # (M,B,qc,KVH,G,hd)
+        qp_blk = q_pos[:, :, qi * qc : (qi + 1) * qc]          # (M,B,qc)
+        # causal block skip: kv chunks beyond this q chunk can't attend.
+        n_need = n_kv if not causal or sq == 1 or n_q == 1 else min(
+            n_kv, ((qi + 1) * qc + kc - 1) // kc
+        )
+
+        def kv_step(carry, xs, q_blk=q_blk, qp_blk=qp_blk):
+            m_prev, l_prev, acc = carry
+            k_blk, v_blk, kp_blk = xs                          # (M,B,kc,KVH,hd), .., (M,B,kc)
+            s = jnp.einsum(
+                "mbqkgd,mbckd->mbkgqc", q_blk, k_blk, preferred_element_type=jnp.float32
+            ) * scale                                          # (M,B,KVH,G,qc,kc)
+            valid = (kp_blk >= 0)[:, :, None, :]               # (M,B,1,kc)
+            if causal:
+                valid = valid & (kp_blk[:, :, None, :] <= qp_blk[:, :, :, None])
+            if use_window:
+                in_win = (
+                    qp_blk[:, :, :, None] - kp_blk[:, :, None, :] < window
+                )
+                if sink > 0:
+                    in_win = in_win | (kp_blk[:, :, None, :] < sink)
+                valid = valid & in_win
+            mask = valid[:, :, None, None, :, :]               # (M,B,1,1,qc|1,kc)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))        # (M,B,KVH,G,qc)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "mbkgqc,mbckd->mbkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((m, b, kvh, g, qc), NEG_INF, jnp.float32),
+            jnp.zeros((m, b, kvh, g, qc), jnp.float32),
+            jnp.zeros((m, b, kvh, g, qc, hd), jnp.float32),
+        )
+        xs = (
+            jnp.moveaxis(k_ch[:, :, :n_need], 2, 0),
+            jnp.moveaxis(v_ch[:, :, :n_need], 2, 0),
+            jnp.moveaxis(kp_ch[:, :, :n_need], 2, 0),
+        )
+        (m_f, l_f, acc), _ = lax.scan(kv_step, init, xs)
+        o = acc / jnp.maximum(l_f, 1e-30)[..., None]           # (M,B,KVH,G,qc,hd)
+        out_chunks.append(jnp.moveaxis(o, -2, 2))              # (M,B,qc,KVH,G,hd)
+    out = jnp.concatenate(out_chunks, axis=2) if n_q > 1 else out_chunks[0]
+    return out.reshape(m, b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache for one layer stack.
+
+    k, v: (L, M, B, S_cache, KVH, hd).  ``S_cache`` is the full context
+    for dense attention or the window size for sliding-window attention.
+    Absolute positions of slots are reconstructed arithmetically from the
+    decode position, so no position array is stored.
+    """
+    k: jax.Array
+    v: jax.Array
+
+
+def make_kv_cache(
+    num_layers: int, m: int, b: int, s_cache: int, kvh: int, hd: int, dtype
+) -> KVCache:
+    shape = (num_layers, m, b, s_cache, kvh, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_slot_positions(pos: jax.Array, s_cache: int) -> jax.Array:
+    """Absolute position held by each ring-buffer slot *after* writing the
+    token at ``pos`` into slot ``pos % s_cache``.
+
+    pos: (M,B) int32 -> (M,B,S_cache) int32, -1 where the slot is empty.
+    """
+    slots = jnp.arange(s_cache, dtype=jnp.int32)
+    cur = pos[..., None] % s_cache
+    base = pos[..., None] - cur                      # start of current wrap
+    p = jnp.where(slots <= cur, base + slots, base - s_cache + slots)
+    return jnp.where(p >= 0, p, -1)
+
+
+def cache_update_one(
+    cache_k_layer: jax.Array,
+    cache_v_layer: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    slot: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Insert one token's k/v at slot pos % S (or an explicit slot) for
+    every (m, b).
+
+    cache_*_layer: (M,B,S,KVH,hd); k_new/v_new: (M,B,1,KVH,hd); pos: (M,B).
+    """
+    m, b, s, kvh, hd = cache_k_layer.shape
+    if slot is None:
+        slot = pos % s
+    slot = slot.astype(jnp.int32)
+
+    rules = active_rules()
+    if rules is not None:
+        return _cache_update_sharded(
+            rules, cache_k_layer, cache_v_layer, k_new, v_new, slot
+        )
+
+    def upd(c, x, i):
+        return lax.dynamic_update_slice(c, x, (i, 0, 0))
+
+    ck = jax.vmap(upd)(
+        cache_k_layer.reshape(m * b, s, kvh, hd),
+        k_new.astype(cache_k_layer.dtype).reshape(m * b, 1, kvh, hd),
+        slot.reshape(m * b),
+    ).reshape(m, b, s, kvh, hd)
+    cv = jax.vmap(upd)(
+        cache_v_layer.reshape(m * b, s, kvh, hd),
+        v_new.astype(cache_v_layer.dtype).reshape(m * b, 1, kvh, hd),
+        slot.reshape(m * b),
+    ).reshape(m, b, s, kvh, hd)
+    return ck, cv
+
+
+def _cache_update_sharded(rules, ck, cv, k_new, v_new, slot):
+    """Ring-buffer insert when the cache's context dim is sharded
+    (cache_seq -> "model", §Perf tinyllama-decode iteration).
+
+    A dynamic-update-slice along a sharded dim with a data-dependent slot
+    would make GSPMD replicate the whole cache; instead each device checks
+    whether the slot falls inside its local context shard and does a local
+    DUS (no collectives beyond broadcasting the 1-token k/v)."""
+    m, b, s, kvh, hd = ck.shape
+    cache_logical = ("instances", "batch", "cache_seq", "kv_heads", "kv_hd")
+    cache_spec = rules.spec(cache_logical, ck.shape)
+    new_spec = rules.spec(("instances", "batch", None, None, None), k_new.shape)
+    slot_spec = rules.spec(("instances", "batch"), slot.shape)
+    seq_axes = cache_spec[2]  # mesh axes carrying the context dim (or None)
+    seq_axes = (
+        (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes or ())
+    )
+
+    def body(ck_l, cv_l, kn_l, vn_l, slot_l):
+        s_l = ck_l.shape[2]
+        shard = jnp.int32(0)
+        for a in seq_axes:
+            shard = shard * rules.mesh.shape[a] + lax.axis_index(a)
+        start = shard * s_l
+        loc = slot_l - start                       # (m_l, b_l) local slot
+        ok = (loc >= 0) & (loc < s_l)
+        idx = jnp.clip(loc, 0, s_l - 1).reshape(-1)
+        ok = ok.reshape(-1)
+        m_l, b_l = ck_l.shape[0], ck_l.shape[1]
+
+        def upd(c, x, i, o):
+            cur = lax.dynamic_slice(c, (i, 0, 0), (1,) + c.shape[1:])
+            neww = jnp.where(o, x, cur)
+            return lax.dynamic_update_slice(c, neww, (i, 0, 0))
+
+        outs = []
+        for c_l, x_l in ((ck_l, kn_l), (cv_l, vn_l)):
+            r = jax.vmap(upd)(
+                c_l.reshape(m_l * b_l, s_l, *c_l.shape[3:]),
+                x_l.astype(c_l.dtype).reshape(m_l * b_l, 1, *c_l.shape[3:]),
+                idx, ok,
+            )
+            outs.append(r.reshape(c_l.shape))
+        return outs[0], outs[1]
+
+    return jax.shard_map(
+        body, mesh=rules.mesh,
+        in_specs=(cache_spec, cache_spec, new_spec, new_spec, slot_spec),
+        out_specs=(cache_spec, cache_spec),
+        check_vma=False,
+    )(ck, cv, k_new, v_new, slot)
+
+
+# ---------------------------------------------------------------------------
+# full GQA attention block (projection + rope + attention + out-proj)
+# ---------------------------------------------------------------------------
+
+
+def gqa_attention(
+    x: jax.Array,
+    p: dict,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    positions: jax.Array,
+    window: int | jax.Array = 0,
+    sink: int = 0,
+    causal: bool = True,
+    cache: tuple[jax.Array, jax.Array] | None = None,
+    decode_pos: jax.Array | None = None,
+    cache_slot: jax.Array | None = None,
+    cache_kv_pos: jax.Array | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """Merged multi-instance GQA attention.
+
+    x: (M,B,S,D). ``p`` holds wq (M,D,H*hd), wk/wv (M,D,KVH*hd),
+    wo (M,H*hd,D) and optional bq/bk/bv.  Three modes:
+
+    * train/prefill: cache is None — self-attention over x.
+    * decode: cache=(k,v) for this layer, decode_pos (M,B) — S must be 1;
+      returns the updated cache.
+    * cross-attention: kv_override provides precomputed (k, v).
+    """
+    m, b, s, d = x.shape
+    h, kvh, hd = num_heads, num_kv_heads, head_dim
+
+    # constrain the FLAT projections before the head-split reshape: going
+    # straight from a seq-sharded residual to a head-sharded 5-d tensor
+    # trips SPMD's resharding fallback (full rematerialization); gathering
+    # seq on the flat matmul output is the Megatron-SP transition point.
+    q = constrain(
+        linear(x, p["wq"], p.get("bq")), "instances", "batch", None, "heads_flat"
+    ).reshape(m, b, s, h, hd)
+    if kv_override is None:
+        k = constrain(
+            linear(x, p["wk"], p.get("bk")), "instances", "batch", None, "kv_flat"
+        ).reshape(m, b, s, kvh, hd)
+        v = constrain(
+            linear(x, p["wv"], p.get("bv")), "instances", "batch", None, "kv_flat"
+        ).reshape(m, b, s, kvh, hd)
+    else:
+        k, v = kv_override
+    q = constrain(q, "instances", "batch", None, "heads", None)
+    k = constrain(k, "instances", "batch", None, "kv_heads", None)
+    v = constrain(v, "instances", "batch", None, "kv_heads", None)
+
+    if rope_theta > 0 and kv_override is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    elif rope_theta > 0:
+        q = rope(q, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        assert s == 1 and decode_pos is not None
+        ck, cv = cache_update_one(cache[0], cache[1], k, v, decode_pos, slot=cache_slot)
+        new_cache = (ck, cv)
+        s_cache = ck.shape[2]
+        kv_pos = (
+            cache_kv_pos if cache_kv_pos is not None
+            else cache_slot_positions(decode_pos, s_cache)
+        )                                                      # (M,B,S_cache)
+        q_pos = decode_pos[..., None]                          # (M,B,1)
+        o = flash_attention(
+            q, ck, cv, q_pos, kv_pos, window=window, sink=sink, causal=True
+        )
+    else:
+        q_pos = positions
+        if kv_override is not None:
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(k.shape[2], dtype=jnp.int32), (m, b, k.shape[2])
+            )
+        else:
+            kv_pos = positions
+        o = flash_attention(
+            q, k, v, q_pos, kv_pos, window=window, sink=sink, causal=causal
+        )
+
+    o = o.reshape(m, b, s, h * hd)
+    out = linear(o, p["wo"], p.get("bo"))
+    out = constrain(out, "instances", "batch", "seq", "act_embed")
+    return out, new_cache

@@ -1,0 +1,120 @@
+"""InternVL2-26B language backbone + stub vision frontend [arXiv:2404.16821].
+
+Per the assignment spec, the vision encoder (InternViT-6B) is a STUB:
+``input_specs`` provides precomputed patch embeddings of the right shape
+(B, P, vision_embed_dim).  This module implements everything downstream:
+the MLP projector and the InternLM2 decoder (llama-style GQA trunk,
+reused from :mod:`repro.models.dense`).
+
+This is also the paper §6 "common backbone" case in miniature: the
+vision embeddings are shared inputs while the LM trunk is the per-task
+fine-tuned (and therefore NetFuse-merged) part.
+
+Sequence layout: [P image-patch positions][S_text token positions].
+``shape.seq_len`` counts total positions, so text length = seq_len - P.
+Decode: image patches live in the KV cache after prefill; decode_step is
+exactly the dense decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import dense
+from repro.models import layers as L
+from repro.models.common import make_factory, param_axes, param_values
+
+
+def build_params(cfg: ModelConfig, f):
+    p = dense.build_params(cfg, f)
+    m = cfg.num_instances
+    p["projector"] = {
+        "w1": f((m, cfg.vision_embed_dim, cfg.d_model),
+                ("instances", None, "embed"), init="fan_in"),
+        "b1": f((m, cfg.d_model), ("instances", "embed"), init="zeros"),
+        "norm": f((m, cfg.vision_embed_dim), ("instances", None), init="ones"),
+    }
+    return p
+
+
+def init(cfg, key):
+    return param_values(build_params(cfg, make_factory(cfg, key)))
+
+
+def abstract_params(cfg):
+    return param_values(build_params(cfg, make_factory(cfg, abstract=True)))
+
+
+def axes(cfg):
+    return param_axes(build_params(cfg, make_factory(cfg, abstract=True)))
+
+
+def project_image(cfg, params, image_embeds):
+    """Stub-ViT patch embeddings (M,B,P,vision_dim) -> LM space (M,B,P,D)."""
+    pp = params["projector"]
+    x = L.layer_norm(image_embeds.astype(jnp.dtype(cfg.dtype)), pp["norm"], None, cfg.norm_eps)
+    return L.linear(x, pp["w1"], pp["b1"])
+
+
+def _combined(cfg, params, tokens, image_embeds):
+    tok = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
+    img = project_image(cfg, params, image_embeds)
+    return jnp.concatenate([img, tok], axis=2)
+
+
+def forward(cfg, params, tokens, image_embeds, *, remat: bool = False):
+    """Returns logits over ALL positions (image prefix + text); callers
+    slice [:, :, P:] for text logits."""
+    x = _combined(cfg, params, tokens, image_embeds)
+    m, b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (m, b, s))
+    return dense.forward(cfg, params, tokens, inputs_embeds=x, positions=positions, remat=remat)
+
+
+def text_logits(cfg, params, tokens, image_embeds, **kw):
+    p = image_embeds.shape[2]
+    return forward(cfg, params, tokens, image_embeds, **kw)[:, :, p:]
+
+
+def prefill(cfg, params, tokens, image_embeds, *, cache_len: int | None = None):
+    """Prompt = image patches + text tokens; returns (last logits, cache)."""
+    x = _combined(cfg, params, tokens, image_embeds)
+    m, b, s, _ = x.shape
+    # delegate to the dense prefill loop by substituting embeddings:
+    # dense.prefill embeds tokens itself, so re-implement the thin shell.
+    import jax.numpy as jnp
+    from jax import lax
+
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (m, b, s))
+    window = cfg.sliding_window
+    if cache_len is None:
+        cache_len = window if window else s
+
+    def body(xc, lp):
+        n = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q = L.linear(n, lp["wq"]).reshape(m, b, s, cfg.num_heads, cfg.head_dim)
+        kk = L.linear(n, lp["wk"]).reshape(m, b, s, cfg.num_kv_heads, cfg.head_dim)
+        vv = L.linear(n, lp["wv"]).reshape(m, b, s, cfg.num_kv_heads, cfg.head_dim)
+        q = L.rope(q, positions, cfg.rope_theta)
+        kk = L.rope(kk, positions, cfg.rope_theta)
+        o = L.flash_attention(q, kk, vv, positions, positions, window=window)
+        xc = xc + L.linear(o.reshape(m, b, s, -1), lp["wo"])
+        nn_ = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = xc + L.swiglu_mlp(nn_, lp["w_gate"], lp["w_up"], lp["w_down"])
+        if cache_len >= s:
+            pad = cache_len - s
+            kc = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            kc, vc = kk[:, :, s - cache_len:], vv[:, :, s - cache_len:]
+        return xc, (kc.astype(jnp.dtype(cfg.dtype)), vc.astype(jnp.dtype(cfg.dtype)))
+
+    x, (ck, cv) = lax.scan(body, x, params["layers"])
+    logits = dense._logits(cfg, params, x[:, :, -1:])[:, :, 0]
+    return logits, L.KVCache(k=ck, v=cv)
+
+
+decode_step = dense.decode_step
+make_cache = dense.make_cache
+cache_axes = dense.cache_axes

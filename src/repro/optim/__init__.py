@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptState, adamw_init, adamw_update, sgdm_init, sgdm_update
+from repro.optim.schedules import constant, cosine_with_warmup, linear_warmup

@@ -1,0 +1,77 @@
+"""Optimizers in pure JAX (no optax dependency): AdamW + SGD-momentum,
+with global-norm gradient clipping.  Optimizer state mirrors the param
+pytree so the launcher's sharding rules apply to it unchanged (moments
+shard like their params — the FSDP memory story depends on this)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Pytree         # first moment (or momentum for SGD)
+    nu: Pytree | None  # second moment (None for SGD)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def adamw_init(params) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), _zeros_like_f32(params))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step, mu, nu), {"grad_norm": gnorm}
+
+
+def sgdm_init(params) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
+
+
+def sgdm_update(grads, state: OptState, params, *, lr, momentum=0.9, max_grad_norm=1.0):
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, mu
+    )
+    return new_params, OptState(state.step + 1, mu, None), {"grad_norm": gnorm}

@@ -1,0 +1,197 @@
+"""Multi-model serving engine — the paper's deployment scenario.
+
+M fine-tuned instances of one architecture are NetFuse-merged and served
+from a single fused program.  The engine keeps one request queue per
+instance (different tasks have different input streams — paper §2.1) and
+a fixed (M, B) slot grid of KV-cache entries:
+
+* incoming requests are prefilled one at a time (B'=1) and their KV
+  written into a free slot of their instance's row,
+* every engine step runs ONE fused decode for the whole (M, B) grid —
+  this is the kernel-launch (dispatch) amortization the paper measures,
+* slots finish independently (EOS / max_new_tokens) and are refilled
+  from their instance's queue — continuous batching at slot granularity
+  (per-slot positions; the decode path masks empty slots).
+
+Families with uniform KVCache (dense / moe / vlm) get slot-level cache
+surgery; recurrent-state families (ssm / hybrid) are served with
+whole-batch admission (documented limitation — their state swap is a
+different tree layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import api
+from repro.models.layers import KVCache
+
+
+@dataclasses.dataclass
+class Request:
+    instance: int                  # which fine-tuned model (task) this targets
+    prompt: list[int]
+    max_new_tokens: int = 16
+    request_id: int = -1
+
+
+@dataclasses.dataclass
+class Result:
+    request_id: int
+    instance: int
+    tokens: list[int]              # generated tokens (excluding prompt)
+
+
+def _write_slot(cache: KVCache, slot_cache: KVCache, m: int, b: int) -> KVCache:
+    """Write a single-request cache (L,1,1,S,KVH,hd) into grid slot (m,b)."""
+    def upd(grid, one):
+        s = min(one.shape[3], grid.shape[3])
+        return lax.dynamic_update_slice(
+            grid, one[:, :, :, :s].astype(grid.dtype), (0, m, b, 0, 0, 0)
+        )
+    return KVCache(k=upd(cache.k, slot_cache.k), v=upd(cache.v, slot_cache.v))
+
+
+class MultiModelServer:
+    """Greedy/temperature decoding over an (M, B) slot grid."""
+
+    def __init__(
+        self,
+        cfg,
+        params,                    # merged params (instances axis = M)
+        *,
+        slots_per_instance: int,
+        max_context: int,
+        eos_id: int | None = None,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        assert cfg.family in ("dense", "moe", "vlm"), (
+            "slot-level serving supports uniform-KVCache families; "
+            "ssm/hybrid use whole-batch serving (see examples)"
+        )
+        self.cfg = cfg
+        self.params = params
+        self.m = cfg.num_instances
+        self.b = slots_per_instance
+        self.max_context = max_context
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self._req_counter = itertools.count()
+
+        self.queues: list[deque[Request]] = [deque() for _ in range(self.m)]
+        self.active: list[list[Request | None]] = [
+            [None] * self.b for _ in range(self.m)
+        ]
+        self.generated: dict[int, list[int]] = {}
+        self.cache = api.make_cache(cfg, self.m, self.b, max_context)
+        self.pos = np.zeros((self.m, self.b), np.int32)
+        self.cur_tok = np.zeros((self.m, self.b), np.int32)
+        self.slot_busy = np.zeros((self.m, self.b), bool)
+        self.steps = 0
+
+        self._decode = jax.jit(
+            lambda params, cache, tok, pos: api.decode_step(cfg, params, cache, tok, pos)
+        )
+        self._prefill = jax.jit(
+            lambda params, batch: api.prefill(cfg, params, batch, cache_len=max_context),
+            static_argnames=(),
+        )
+
+    # -- request admission ---------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        req.request_id = next(self._req_counter)
+        self.queues[req.instance].append(req)
+        return req.request_id
+
+    def _admit(self):
+        from repro.models import common as C
+        fam = api.family_module(self.cfg)
+        ax = fam.axes(self.cfg)
+        for m in range(self.m):
+            for b in range(self.b):
+                if self.slot_busy[m, b] or not self.queues[m]:
+                    continue
+                req = self.queues[m].popleft()
+                params_m = C.take_instance(self.params, ax, m)
+                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, None]}
+                if self.cfg.family == "vlm":
+                    batch["image_embeds"] = jnp.zeros(
+                        (1, 1, self.cfg.num_image_patches, self.cfg.vision_embed_dim),
+                        jnp.dtype(self.cfg.dtype),
+                    )
+                last_logits, slot_cache = self._prefill(params_m, batch)
+                self.cache = _write_slot(self.cache, slot_cache, m, b)
+                first_tok = self._sample(last_logits[0, 0])
+                plen = len(req.prompt) + (
+                    self.cfg.num_image_patches if self.cfg.family == "vlm" else 0
+                )
+                self.pos[m, b] = plen
+                self.cur_tok[m, b] = first_tok
+                self.slot_busy[m, b] = True
+                self.active[m][b] = req
+                self.generated[req.request_id] = [int(first_tok)]
+
+    def _sample(self, logits) -> int:
+        if self.temperature <= 0:
+            return int(jnp.argmax(logits))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(sub, logits / self.temperature))
+
+    # -- engine step ----------------------------------------------------------
+
+    def step(self) -> list[Result]:
+        """Admit pending requests, run ONE fused decode over the whole
+        (M,B) grid, collect finished slots."""
+        self._admit()
+        if not self.slot_busy.any():
+            return []
+        tok = jnp.asarray(self.cur_tok)[..., None]
+        pos = jnp.asarray(self.pos)
+        logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        self.steps += 1
+        logits = np.asarray(jax.device_get(logits))
+
+        done: list[Result] = []
+        for m in range(self.m):
+            for b in range(self.b):
+                if not self.slot_busy[m, b]:
+                    continue
+                req = self.active[m][b]
+                nxt = (
+                    int(np.argmax(logits[m, b])) if self.temperature <= 0
+                    else self._sample(jnp.asarray(logits[m, b]))
+                )
+                gen = self.generated[req.request_id]
+                gen.append(nxt)
+                self.pos[m, b] += 1
+                self.cur_tok[m, b] = nxt
+                finished = (
+                    len(gen) >= req.max_new_tokens
+                    or (self.eos_id is not None and nxt == self.eos_id)
+                    or int(self.pos[m, b]) >= self.max_context - 1
+                )
+                if finished:
+                    done.append(Result(req.request_id, m, gen))
+                    self.slot_busy[m, b] = False
+                    self.active[m][b] = None
+                    del self.generated[req.request_id]
+        return done
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Result]:
+        out: list[Result] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.slot_busy.any() and all(not q for q in self.queues):
+                return out
+        raise RuntimeError("serving did not drain")

@@ -1,0 +1,111 @@
+"""Training substrate: train_step factory (AdamW + remat + optional
+microbatch grad accumulation) and a simple host loop.
+
+NetFuse training mode (paper §6 "Applicability on training models"):
+with num_instances M > 1 the same step trains M models at once — the
+loss averages per-instance CE (each instance sees its own data stream),
+and gradients stay instance-local because every op is input-weight
+local.  ``examples/train_merged.py`` demonstrates this end to end.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.optim import adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def make_train_step(
+    cfg,
+    *,
+    lr_schedule: Callable,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    microbatches: int = 1,
+):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss(params, batch):
+        return api.loss_fn(cfg, params, batch)
+
+    def grads_of(params, batch):
+        (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        return l, m, g
+
+    def train_step(state: TrainState, batch):
+        params, opt = state
+        if microbatches > 1:
+            def mb(i, carry):
+                lsum, gsum = carry
+                sub = jax.tree.map(
+                    lambda x: x.reshape(x.shape[0], microbatches, -1, *x.shape[2:])[:, i],
+                    batch,
+                )
+                l, _, g = grads_of(params, sub)
+                return (lsum + l, jax.tree.map(jnp.add, gsum, g))
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            lsum, gsum = jax.lax.fori_loop(
+                0, microbatches, mb, (jnp.float32(0.0), zero)
+            )
+            l = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = {}
+        else:
+            l, metrics, grads = grads_of(params, batch)
+        lr = lr_schedule(opt.step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, opt, params,
+            lr=lr, weight_decay=weight_decay, max_grad_norm=max_grad_norm,
+        )
+        out = {"loss": l, "lr": lr, **opt_metrics}
+        out.update({k: v for k, v in metrics.items()})
+        return TrainState(new_params, new_opt), out
+
+    return train_step
+
+
+def init_state(cfg, key) -> TrainState:
+    params = api.init(cfg, key)
+    return TrainState(params, adamw_init(params))
+
+
+def train_loop(
+    cfg,
+    data,
+    *,
+    steps: int,
+    batch_size: int,
+    seq_len: int,
+    lr_schedule,
+    key=None,
+    log_every: int = 10,
+    state: TrainState | None = None,
+    print_fn=print,
+):
+    """Host loop used by examples + integration tests (CPU-scale)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    state = init_state(cfg, key) if state is None else state
+    step_fn = jax.jit(make_train_step(cfg, lr_schedule=lr_schedule))
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = data.batch(step, batch_size, seq_len) if hasattr(data, "batch") else data(step)
+        state, metrics = step_fn(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            l = float(metrics["loss"])
+            losses.append((step, l))
+            print_fn(
+                f"step {step:5d}  loss {l:.4f}  lr {float(metrics['lr']):.2e}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"({time.perf_counter() - t0:.1f}s)"
+            )
+    return state, losses

@@ -1,0 +1,173 @@
+"""Exactness tests for paper Algorithm 1 (graph merging).
+
+The paper's central correctness claim: "NETFUSE does not alter the
+computation results in any way".  We build per-instance graphs, merge
+them, and assert the merged execution matches per-instance execution.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * 0.1
+
+
+def make_ffnn_graph():
+    """The paper's Figure 4 example: FC -> LayerNorm -> GELU -> FC."""
+    g = G.Graph()
+    g.add("x", "input")
+    g.add("fc1", "matmul", ["x"])
+    g.add("ln", "layernorm", ["fc1"])
+    g.add("act", "gelu", ["ln"])
+    g.add("fc2", "matmul", ["act"])
+    g.outputs = ["fc2"]
+    return g
+
+
+def make_ffnn_weights(key, d_in=12, d_hidden=16, d_out=8):
+    k = jax.random.split(key, 6)
+    return {
+        "fc1": {"w": _rand(k[0], d_in, d_hidden), "b": _rand(k[1], d_hidden)},
+        "ln": {"scale": 1.0 + _rand(k[2], d_hidden), "bias": _rand(k[3], d_hidden)},
+        "fc2": {"w": _rand(k[4], d_hidden, d_out), "b": _rand(k[5], d_out)},
+    }
+
+
+def make_cnn_graph():
+    """Small CNN: conv -> BN -> relu -> conv(residual add) -> pool -> flatten -> fc."""
+    g = G.Graph()
+    g.add("img", "input")
+    g.add("conv1", "conv2d", ["img"], stride=1, padding="SAME")
+    g.add("bn1", "batchnorm", ["conv1"])
+    g.add("relu1", "relu", ["bn1"])
+    g.add("conv2", "conv2d", ["relu1"], stride=1, padding="SAME")
+    g.add("res", "add", ["conv2", "relu1"])
+    g.add("pool", "maxpool2d", ["res"], kernel=2)
+    g.add("gap", "global_avgpool", ["pool"])
+    g.add("fc", "matmul", ["gap"])
+    g.outputs = ["fc"]
+    return g
+
+
+def make_cnn_weights(key, cin=3, c=8, n_class=5):
+    k = jax.random.split(key, 8)
+    return {
+        "conv1": {"w": _rand(k[0], 3, 3, cin, c), "b": _rand(k[1], c)},
+        "bn1": {
+            "mean": _rand(k[2], c),
+            "var": jnp.abs(_rand(k[3], c)) + 0.5,
+            "scale": 1.0 + _rand(k[4], c),
+            "bias": _rand(k[5], c),
+        },
+        "conv2": {"w": _rand(k[6], 3, 3, c, c)},
+        "fc": {"w": _rand(k[7], c, n_class)},
+    }
+
+
+@pytest.mark.parametrize("m", [2, 4, 8])
+def test_ffnn_merge_exact(m):
+    """Paper Fig. 4: merged FFNN == per-instance FFNNs, bit-for-bit math."""
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, m + 1)
+    g = make_ffnn_graph()
+    weights = [make_ffnn_weights(keys[i]) for i in range(m)]
+    inputs = [{"x": _rand(keys[-1], 4, 12) + i} for i in range(m)]
+
+    merged, mw, dims = G.merge_graph(g, weights)
+    # fc1 -> bmm demands Batch; ln demands Channel => a reshape is inserted.
+    assert any(op.op_type == "merge_reshape" for op in merged.ops.values())
+    assert dims["fc1"] is G.MergeDim.BATCH
+    assert dims["ln"] is G.MergeDim.CHANNEL
+
+    fused = G.execute_merged(merged, mw, dims, inputs)
+    for i in range(m):
+        ref = G.execute(g, inputs[i], weights[i])
+        np.testing.assert_allclose(
+            np.asarray(fused[i]["fc2"]), np.asarray(ref["fc2"]), rtol=2e-5, atol=2e-5
+        )
+
+
+@pytest.mark.parametrize("m", [2, 3])
+def test_cnn_merge_exact(m):
+    """Grouped-conv merging (paper Appendix A) on a residual CNN."""
+    key = jax.random.PRNGKey(1)
+    keys = jax.random.split(key, m + 1)
+    g = make_cnn_graph()
+    weights = [make_cnn_weights(keys[i]) for i in range(m)]
+    inputs = [{"img": _rand(keys[-1], 2, 8, 8, 3) * (i + 1)} for i in range(m)]
+
+    merged, mw, dims = G.merge_graph(g, weights)
+    assert merged.ops["conv1"].attrs["groups"] == m
+    fused = G.execute_merged(merged, mw, dims, inputs)
+    for i in range(m):
+        ref = G.execute(g, inputs[i], weights[i])
+        np.testing.assert_allclose(
+            np.asarray(fused[i]["fc"]), np.asarray(ref["fc"]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_grouped_ops_compose():
+    """Merging ops that already have groups multiplies the group count
+    (paper §3.1: 4 grouped convs x 2 groups -> 8 groups)."""
+    g = G.Graph()
+    g.add("x", "input")
+    g.add("gconv", "conv2d", ["x"], groups=2)
+    g.outputs = ["gconv"]
+    key = jax.random.PRNGKey(2)
+    m = 4
+    keys = jax.random.split(key, m + 1)
+    weights = [
+        {"gconv": {"w": _rand(keys[i], 3, 3, 4, 8)}} for i in range(m)
+    ]  # cin=8 in 2 groups of 4
+    inputs = [{"x": _rand(keys[-1], 2, 6, 6, 8) + i} for i in range(m)]
+    merged, mw, dims = G.merge_graph(g, weights)
+    assert merged.ops["gconv"].attrs["groups"] == 8
+    fused = G.execute_merged(merged, mw, dims, inputs)
+    for i in range(m):
+        ref = G.execute(g, inputs[i], weights[i])
+        np.testing.assert_allclose(
+            np.asarray(fused[i]["gconv"]), np.asarray(ref["gconv"]), rtol=2e-5, atol=2e-5
+        )
+
+
+def test_merge_rejects_different_architectures():
+    from repro.core import merge as M
+
+    p1 = {"a": jnp.zeros((2, 3))}
+    p2 = {"b": jnp.zeros((2, 3))}
+    with pytest.raises(ValueError):
+        M.stack_instances([p1, p2])
+
+
+def test_dontcare_majority_rule():
+    """Alg.1 lines 23-27: DontCare op follows the majority of parents."""
+    g = G.Graph()
+    g.add("x", "input")
+    g.add("fc", "matmul", ["x"])        # Batch
+    g.add("ln1", "layernorm", ["fc"])   # Channel
+    g.add("ln2", "layernorm", ["fc"])   # Channel (reuses fc's output)
+    g.add("sum", "add", ["ln1", "ln2"])  # DontCare -> Channel (majority)
+    g.outputs = ["sum"]
+    key = jax.random.PRNGKey(3)
+    keys = jax.random.split(key, 3)
+    mkw = lambda k: {
+        "fc": {"w": _rand(k, 6, 8)},
+        "ln1": {"scale": jnp.ones(8), "bias": jnp.zeros(8)},
+        "ln2": {"scale": 2 * jnp.ones(8), "bias": jnp.ones(8)},
+    }
+    weights = [mkw(keys[i]) for i in range(2)]
+    inputs = [{"x": _rand(keys[-1], 4, 6) + i} for i in range(2)]
+    merged, mw, dims = G.merge_graph(g, weights)
+    assert dims["sum"] is G.MergeDim.CHANNEL
+    fused = G.execute_merged(merged, mw, dims, inputs)
+    for i in range(2):
+        ref = G.execute(g, inputs[i], weights[i])
+        np.testing.assert_allclose(
+            np.asarray(fused[i]["sum"]), np.asarray(ref["sum"]), rtol=2e-5, atol=2e-5
+        )

@@ -1,0 +1,177 @@
+"""Unit + property tests for the merged op counterparts (paper Table 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fused_ops as F
+from repro.core import baselines, merge
+
+
+def _keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# batch matmul == per-instance matmuls
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 6),
+    b=st.integers(1, 5),
+    d=st.integers(1, 9),
+    f=st.integers(1, 9),
+    bias=st.booleans(),
+)
+def test_batch_matmul_property(m, b, d, f, bias):
+    ks = _keys(3)
+    x = jax.random.normal(ks[0], (m, b, d))
+    w = jax.random.normal(ks[1], (m, d, f))
+    bb = jax.random.normal(ks[2], (m, f)) if bias else None
+    y = F.batch_matmul(x, w, bb)
+    for i in range(m):
+        ref = x[i] @ w[i] + (bb[i] if bias else 0.0)
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_batch_matmul_concat_matches_instance_axis():
+    ks = _keys(2)
+    m, b, d, f = 4, 3, 8, 5
+    x = jax.random.normal(ks[0], (m, b, d))
+    w = jax.random.normal(ks[1], (m, d, f))
+    y1 = F.batch_matmul(x, w)
+    y2 = F.batch_matmul_concat(x.reshape(m * b, d), w).reshape(m, b, f)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# grouped conv == M convs (paper Appendix A derivation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,cin,cout,stride", [(2, 3, 4, 1), (4, 2, 2, 2), (1, 3, 5, 1)])
+def test_grouped_conv_equals_m_convs(m, cin, cout, stride):
+    ks = _keys(2 * m)
+    xs = [jax.random.normal(ks[i], (2, 8, 8, cin)) for i in range(m)]
+    ws = [jax.random.normal(ks[m + i], (3, 3, cin, cout)) for i in range(m)]
+    x_cat = jnp.concatenate(xs, axis=-1)
+    w_cat = F.merge_conv_weights(ws)
+    y = F.grouped_conv2d(x_cat, w_cat, groups=m, stride=stride)
+    for i in range(m):
+        ref = F.grouped_conv2d(xs[i], ws[i], groups=1, stride=stride)
+        np.testing.assert_allclose(
+            np.asarray(y[..., i * cout : (i + 1) * cout]), np.asarray(ref),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# group norm == M layer norms
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 5), b=st.integers(1, 4), d=st.integers(2, 12))
+def test_group_norm_equals_m_layernorms(m, b, d):
+    ks = _keys(3)
+    xs = jax.random.normal(ks[0], (m, b, d))
+    scale = 1.0 + 0.1 * jax.random.normal(ks[1], (m, d))
+    bias = 0.1 * jax.random.normal(ks[2], (m, d))
+
+    # concat (paper) form
+    x_cat = jnp.moveaxis(xs, 0, 1).reshape(b, m * d)
+    y_cat = F.group_norm(x_cat, scale.reshape(-1), bias.reshape(-1), num_groups=m)
+    # instance-axis form
+    y_inst = F.merged_layer_norm(xs, scale, bias)
+
+    for i in range(m):
+        mu = xs[i].mean(-1, keepdims=True)
+        var = xs[i].var(-1, keepdims=True)
+        ref = (xs[i] - mu) / jnp.sqrt(var + 1e-5) * scale[i] + bias[i]
+        np.testing.assert_allclose(
+            np.asarray(y_cat[:, i * d : (i + 1) * d]), np.asarray(ref), rtol=2e-3, atol=2e-3
+        )
+        np.testing.assert_allclose(np.asarray(y_inst[i]), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_merged_embedding():
+    ks = _keys(2)
+    m, v, d = 3, 11, 6
+    table = jax.random.normal(ks[0], (m, v, d))
+    ids = jax.random.randint(ks[1], (m, 4, 5), 0, v)
+    out = F.merged_embedding(ids, table)
+    assert out.shape == (m, 4, 5, d)
+    for i in range(m):
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(table[i][ids[i]]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 4), b=st.integers(1, 4), d=st.integers(1, 8))
+def test_form_conversion_roundtrip(m, b, d):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m * b, d))
+    y = F.batch_to_channel(x, m)
+    assert y.shape == (b, m * d)
+    z = F.channel_to_batch(y, m)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(z))
+
+
+# ---------------------------------------------------------------------------
+# baselines agree with each other (and with netfuse) on a toy model
+# ---------------------------------------------------------------------------
+
+
+def _toy_apply(params, x):
+    """Fusion-aware 2-layer MLP: params have leading M axis, x is (M,B,D)."""
+    h = F.batch_matmul(x, params["w1"], params["b1"])
+    h = F.merged_layer_norm(h, params["ln_s"], params["ln_b"])
+    h = jax.nn.gelu(h)
+    return F.batch_matmul(h, params["w2"])
+
+
+def _toy_params(key, d=8, h=16, o=4):
+    ks = jax.random.split(key, 5)
+    return {
+        "w1": jax.random.normal(ks[0], (d, h)) * 0.1,
+        "b1": jax.random.normal(ks[1], (h,)) * 0.1,
+        "ln_s": 1.0 + jax.random.normal(ks[2], (h,)) * 0.1,
+        "ln_b": jax.random.normal(ks[3], (h,)) * 0.1,
+        "w2": jax.random.normal(ks[4], (h, o)) * 0.1,
+    }
+
+
+def test_all_strategies_agree():
+    m = 5
+    ks = _keys(m + 1, seed=7)
+    params_list = [_toy_params(ks[i]) for i in range(m)]
+    inputs = [jax.random.normal(ks[-1], (3, 8)) + i for i in range(m)]
+
+    seq = baselines.sequential(_toy_apply, params_list, inputs)
+    conc = baselines.concurrent(_toy_apply, params_list, inputs)
+    hyb = baselines.hybrid(_toy_apply, params_list, inputs, num_concurrent=2)
+    fused = baselines.netfuse(_toy_apply, params_list, inputs)
+    for i in range(m):
+        for other in (conc[i], hyb[i], fused[i]):
+            np.testing.assert_allclose(
+                np.asarray(seq[i]), np.asarray(other), rtol=1e-5, atol=1e-6
+            )
+
+
+def test_stack_unstack_roundtrip():
+    ks = _keys(4, seed=9)
+    params_list = [_toy_params(k) for k in ks]
+    merged = merge.stack_instances(params_list)
+    assert merge.num_instances(merged) == 4
+    back = merge.unstack_instances(merged)
+    for a, b in zip(params_list, back):
+        jax.tree.map(lambda x, y: np.testing.assert_allclose(np.asarray(x), np.asarray(y)), a, b)
+
+
+def test_concat_instances_composes():
+    ks = _keys(4, seed=11)
+    a = merge.stack_instances([_toy_params(ks[0]), _toy_params(ks[1])])
+    b = merge.stack_instances([_toy_params(ks[2])])
+    ab = merge.concat_instances(a, b)
+    assert merge.num_instances(ab) == 3

@@ -1,0 +1,364 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property
+tests against the pure-jnp oracles in kernels/ref.py (interpret=True —
+kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attn import decode_attention
+from repro.kernels.fused_matmul import fused_matmul
+from repro.kernels.group_norm import group_rms_norm
+
+
+def _tol(dt):
+    return dict(rtol=3e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+
+
+def _cmp(got, want, dt):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused_matmul
+# ---------------------------------------------------------------------------
+
+MATMUL_SHAPES = [
+    (1, 1, 16, 16),      # paper regime: single token, single instance
+    (8, 1, 64, 32),      # 8 merged instances at bs=1 (the NetFuse case)
+    (2, 128, 256, 128),  # MXU-aligned
+    (3, 7, 48, 17),      # ragged everything
+    (4, 33, 96, 64),
+]
+
+
+@pytest.mark.parametrize("m,t,d,f", MATMUL_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bias", [False, True])
+def test_fused_matmul_sweep(m, t, d, f, dt, bias):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (m, t, d), dt)
+    w = jax.random.normal(ks[1], (m, d, f), dt)
+    b = jax.random.normal(ks[2], (m, f), dt) if bias else None
+    _cmp(fused_matmul(x, w, b), ref.fused_matmul(x, w, b), dt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 4), t=st.integers(1, 9), d=st.integers(1, 24),
+    f=st.integers(1, 12), bt=st.sampled_from([32, 128]),
+    bd=st.sampled_from([8, 512]),
+)
+def test_fused_matmul_property(m, t, d, f, bt, bd):
+    """Block-shape invariance: any clamped tiling gives the same result."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    x = jax.random.normal(ks[0], (m, t, d))
+    w = jax.random.normal(ks[1], (m, d, f))
+    got = fused_matmul(x, w, block_t=bt, block_d=bd)
+    _cmp(got, ref.fused_matmul(x, w), jnp.float32)
+
+
+def test_fused_matmul_instance_isolation():
+    """NetFuse invariant: zeroing instance j's weights must not change
+    instance i's output."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    x = jax.random.normal(ks[0], (3, 4, 32))
+    w = jax.random.normal(ks[1], (3, 32, 16))
+    base = fused_matmul(x, w)
+    w2 = w.at[1].set(0.0)
+    out = fused_matmul(x, w2)
+    _cmp(out[0], base[0], jnp.float32)
+    _cmp(out[2], base[2], jnp.float32)
+    assert float(jnp.abs(out[1]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# group_rms_norm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,t,d", [(1, 1, 8), (2, 16, 64), (3, 250, 128), (4, 64, 512)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_group_rms_norm_sweep(m, t, d, dt):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(ks[0], (m, t, d), dt)
+    sc = 1 + 0.1 * jax.random.normal(ks[1], (m, d), dt)
+    _cmp(group_rms_norm(x, sc), ref.group_rms_norm(x, sc), dt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 4), t=st.integers(1, 17), d=st.integers(2, 40))
+def test_group_rms_norm_property(m, t, d):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], (m, t, d))
+    sc = 1 + 0.1 * jax.random.normal(ks[1], (m, d))
+    _cmp(group_rms_norm(x, sc, block_t=8), ref.group_rms_norm(x, sc), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+DECODE_SHAPES = [
+    (1, 1, 4, 4, 32, 16),    # MHA
+    (2, 2, 4, 2, 64, 16),    # GQA 2:1
+    (1, 3, 8, 4, 128, 32),
+    (2, 1, 8, 1, 96, 8),     # MQA
+]
+
+
+@pytest.mark.parametrize("m,b,h,kvh,s,hd", DECODE_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(m, b, h, kvh, s, hd, dt):
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = jax.random.normal(ks[0], (m, b, h, hd), dt)
+    k = jax.random.normal(ks[1], (m, b, s, kvh, hd), dt)
+    v = jax.random.normal(ks[2], (m, b, s, kvh, hd), dt)
+    kv_len = jax.random.randint(ks[3], (m, b), 1, s + 1)
+    got = decode_attention(q, k, v, kv_len, block_s=32)
+    _cmp(got, ref.decode_attention(q, k, v, kv_len), dt)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 3), kvh=st.sampled_from([1, 2]), g=st.integers(1, 3),
+    s_blocks=st.integers(1, 4), bs=st.sampled_from([16, 32]),
+)
+def test_decode_attention_property(b, kvh, g, s_blocks, bs):
+    """Online-softmax block invariance + mask correctness for any valid
+    prefix length."""
+    m, hd = 2, 8
+    s = s_blocks * bs
+    h = kvh * g
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = jax.random.normal(ks[0], (m, b, h, hd))
+    k = jax.random.normal(ks[1], (m, b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (m, b, s, kvh, hd))
+    kv_len = jax.random.randint(ks[3], (m, b), 1, s + 1)
+    got = decode_attention(q, k, v, kv_len, block_s=bs)
+    _cmp(got, ref.decode_attention(q, k, v, kv_len), jnp.float32)
+
+
+def test_decode_attention_matches_model_flash_path():
+    """Kernel agrees with the model zoo's flash_attention decode path."""
+    from repro.models import layers as L
+    m, b, h, kvh, s, hd = 1, 2, 4, 2, 64, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (m, b, h, hd))
+    k = jax.random.normal(ks[1], (m, b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (m, b, s, kvh, hd))
+    kv_len = jnp.array([[40, 64]], jnp.int32)
+    got = decode_attention(q, k, v, kv_len, block_s=16)
+    kv_pos = jnp.where(
+        jnp.arange(s)[None, None] < kv_len[..., None],
+        jnp.arange(s, dtype=jnp.int32)[None, None], -1,
+    )
+    want = L.flash_attention(
+        q[:, :, None], k, v,
+        (kv_len - 1)[..., None], kv_pos, kv_chunk=16,
+    )[:, :, 0]
+    _cmp(got, want, jnp.float32)
+
+
+def test_ops_dispatch():
+    ks = jax.random.split(jax.random.PRNGKey(8), 2)
+    x = jax.random.normal(ks[0], (2, 4, 16))
+    w = jax.random.normal(ks[1], (2, 16, 8))
+    _cmp(ops.fused_matmul(x, w), ops.fused_matmul(x, w, use_pallas=False), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# slstm_cell — whole-sequence recurrent cell kernel (§Perf xlstm next lever)
+# ---------------------------------------------------------------------------
+
+SLSTM_SHAPES = [
+    (1, 1, 4, 1, 8),     # minimal
+    (2, 3, 16, 2, 8),    # multi-instance, multi-head
+    (3, 2, 24, 4, 16),   # chunk boundary (24 % default chunk)
+    (1, 4, 32, 2, 64),   # wide head
+]
+
+
+def _slstm_inputs(m, b, s, hh, hd, dt):
+    d = hh * hd
+    k = jax.random.PRNGKey(42)
+    pre = (jax.random.normal(k, (m, b, s, 4, d)) * 0.5).astype(dt)
+    r = (jax.random.normal(jax.random.PRNGKey(1), (m, 4, hh, hd, hd)) * 0.2).astype(jnp.float32)
+    state = (
+        jnp.zeros((m, b, d), jnp.float32),
+        jnp.zeros((m, b, d), jnp.float32),
+        jnp.zeros((m, b, d), dt),
+        jnp.full((m, b, d), -1e30, jnp.float32),
+    )
+    return pre, r, state
+
+
+@pytest.mark.parametrize("m,b,s,hh,hd", SLSTM_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_slstm_cell_sweep(m, b, s, hh, hd, dt):
+    pre, r, state = _slstm_inputs(m, b, s, hh, hd, dt)
+    hs_k, st_k = ops.slstm_cell(pre, r, state, num_heads=hh, chunk=8)
+    hs_r, st_r = ref.slstm_cell(pre, r, state, num_heads=hh)
+    tol = 1e-5 if dt == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(hs_k, np.float32), np.asarray(hs_r, np.float32),
+        rtol=tol, atol=tol)
+    for a, bb in zip(st_k, st_r):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(bb, np.float32),
+            rtol=tol, atol=tol)
+
+
+def test_slstm_cell_matches_model_block_recurrence():
+    """Kernel == the sLSTM recurrence inside repro.models.ssm.slstm_block
+    (same gates, stabilizer, head-block-diagonal recurrent projection)."""
+    from repro.configs.base import ModelConfig
+    from repro.models import ssm
+
+    cfg = ModelConfig(
+        name="t", family="ssm", num_layers=1, d_model=32, num_heads=2,
+        num_kv_heads=2, d_ff=0, vocab_size=64, slstm_every=1, slstm_offset=0,
+        dtype="float32", param_dtype="float32",
+    )
+    m, b, s = 2, 3, 12
+    lp = jax.tree.map(lambda p: p, ssm.init(cfg, jax.random.PRNGKey(0))["slstm"][0])
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, b, s, cfg.d_model)) * 0.5
+
+    # replicate the block's pre-activation path, then compare the scan part
+    from repro.models import layers as L
+    xn = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    pre = L.linear(xn, lp["w_in"], lp["b_in"]).reshape(m, b, s, 4, cfg.d_model)
+    state = (
+        jnp.zeros((m, b, cfg.d_model), jnp.float32),
+        jnp.zeros((m, b, cfg.d_model), jnp.float32),
+        jnp.zeros((m, b, cfg.d_model), x.dtype),
+        jnp.full((m, b, cfg.d_model), -1e30, jnp.float32),
+    )
+    hs_k, _ = ops.slstm_cell(pre, lp["r"], state, num_heads=cfg.num_heads, chunk=4)
+
+    _, st = ssm.slstm_block(cfg, lp, x)   # runs the full block
+    # recompute the block's raw scan output by re-deriving hs from its
+    # published step function: easiest exact cross-check is the ref oracle
+    hs_r, _ = ref.slstm_cell(pre, lp["r"], state, num_heads=cfg.num_heads)
+    np.testing.assert_allclose(np.asarray(hs_k), np.asarray(hs_r), rtol=1e-5, atol=1e-5)
+    # and the final h of the oracle must equal the model block's state h
+    _, st_r = ref.slstm_cell(pre, lp["r"], state, num_heads=cfg.num_heads)
+    np.testing.assert_allclose(
+        np.asarray(st_r[2]), np.asarray(st["h"]), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    m=st.integers(1, 3), b=st.integers(1, 3),
+    s_chunks=st.integers(1, 4), hh=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=15, deadline=None)
+def test_slstm_cell_property_chunk_invariance(m, b, s_chunks, hh):
+    """Output is invariant to the kernel's S-chunking (the VMEM-resident
+    carry must be exact across chunk boundaries)."""
+    hd, s = 8, s_chunks * 4
+    pre, r, state = _slstm_inputs(m, b, s, hh, hd, jnp.float32)
+    a, sa = ops.slstm_cell(pre, r, state, num_heads=hh, chunk=4)
+    bfull, sb = ops.slstm_cell(pre, r, state, num_heads=hh, chunk=s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bfull), rtol=1e-6, atol=1e-6)
+    for x, y in zip(sa, sb):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6, atol=1e-6)
+
+
+def test_slstm_block_pallas_flag_matches_reference():
+    """cfg.use_pallas_kernels routes slstm_block through the Pallas cell;
+    forward outputs and prefill->decode state handoff must be identical
+    (serving path — the XLA scan remains the autodiff/training path)."""
+    from repro.configs.base import ModelConfig
+    from repro.models import ssm
+
+    base = ModelConfig(
+        name="t", family="ssm", num_layers=1, d_model=32, num_heads=2,
+        num_kv_heads=2, d_ff=0, vocab_size=64, slstm_every=1, slstm_offset=0,
+        dtype="float32", param_dtype="float32",
+    )
+    lp = ssm.init(base, jax.random.PRNGKey(0))["slstm"][0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 12, base.d_model)) * 0.5
+
+    y_ref, st_ref = ssm.slstm_block(base, lp, x)
+    y_pl, st_pl = ssm.slstm_block(base.with_(use_pallas_kernels=True), lp, x)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    for kk in ("c", "n", "h", "m"):
+        np.testing.assert_allclose(np.asarray(st_pl[kk]), np.asarray(st_ref[kk]),
+                                   rtol=1e-5, atol=1e-5)
+
+    # decode continuation (s=1 with carried state)
+    x1 = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 1, base.d_model)) * 0.5
+    y1_ref, _ = ssm.slstm_block(base, lp, x1, state=st_ref)
+    y1_pl, _ = ssm.slstm_block(
+        base.with_(use_pallas_kernels=True), lp, x1, state=st_pl)
+    np.testing.assert_allclose(np.asarray(y1_pl), np.asarray(y1_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlstm_chunkwise — matrix-memory chunk kernel (companion to slstm_cell)
+# ---------------------------------------------------------------------------
+
+MLSTM_SHAPES = [
+    (1, 1, 1, 8, 8),
+    (2, 2, 2, 32, 16),
+    (1, 3, 4, 24, 8),    # non-power-of-two S
+]
+
+
+def _mlstm_inputs(m, b, hh, s, hd, dt):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = (jax.random.normal(ks[0], (m, b, hh, s, hd)) * 0.5).astype(dt)
+    k = (jax.random.normal(ks[1], (m, b, hh, s, hd)) * 0.5).astype(dt)
+    v = (jax.random.normal(ks[2], (m, b, hh, s, hd)) * 0.5).astype(dt)
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (m, b, hh, s)) + 2.0)
+    li = jax.random.normal(ks[4], (m, b, hh, s)) * 0.5
+    return q, k, v, lf, li
+
+
+@pytest.mark.parametrize("m,b,hh,s,hd", MLSTM_SHAPES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_mlstm_chunkwise_sweep(m, b, hh, s, hd, dt):
+    q, k, v, lf, li = _mlstm_inputs(m, b, hh, s, hd, dt)
+    hk, (ck, nk, mk) = ops.mlstm_chunkwise(q, k, v, lf, li, chunk=8)
+    hr, (cr, nr, mr) = ref.mlstm_chunkwise(q, k, v, lf, li, chunk=8)
+    tol = 2e-5 if dt == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(hk, np.float32),
+                               np.asarray(hr, np.float32), rtol=tol, atol=tol)
+    for a, bb2 in ((ck, cr), (nk, nr), (mk, mr)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb2),
+                                   rtol=tol, atol=tol)
+
+
+@given(chunk=st.sampled_from([4, 8, 16, 32]))
+@settings(max_examples=8, deadline=None)
+def test_mlstm_chunkwise_property_chunk_invariance(chunk):
+    """The chunkwise form is exact: outputs must agree across chunk sizes
+    (and with the model's scan at yet another chunking)."""
+    q, k, v, lf, li = _mlstm_inputs(2, 2, 2, 32, 8, jnp.float32)
+    h1, st1 = ops.mlstm_chunkwise(q, k, v, lf, li, chunk=chunk)
+    h2, st2 = ref.mlstm_chunkwise(q, k, v, lf, li, chunk=16)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+    for a, b2 in zip(st1, st2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b2), rtol=2e-4, atol=2e-4)
+
+
+def test_xlstm_forward_pallas_flag_matches_reference():
+    """Full xLSTM forward with cfg.use_pallas_kernels routes BOTH cell
+    kernels (mLSTM chunk + sLSTM cell) and must match the XLA scans."""
+    from repro.configs import registry
+    from repro.models import ssm
+
+    cfg = registry.get_smoke_config("xlstm-1.3b").with_(
+        dtype="float32", param_dtype="float32")
+    params = ssm.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 2, 16), 0, cfg.vocab_size)
+    y_ref = ssm.forward(cfg, params, toks)
+    y_pl = ssm.forward(cfg.with_(use_pallas_kernels=True), params, toks)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
