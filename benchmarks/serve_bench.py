@@ -1,0 +1,161 @@
+"""Serving benchmark: fused (M, B)-grid serving vs M sequential servers.
+
+The paper's headline claim restated at the serving-system level: one
+NetFuse-merged `MultiModelServer` over M instances vs M single-model
+servers drained one after another (the paper's "sequential" strategy),
+same request set, same slot budget per instance.  Emits a JSON perf
+record on stdout (and optionally to a file) so perf deltas can be
+tracked across PRs.
+
+Run: PYTHONPATH=src python benchmarks/serve_bench.py \
+         [--arch tinyllama-1.1b] [--num-instances 4] [--requests 24] \
+         [--json-out serve_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+
+from repro import api
+from repro.configs import registry
+from repro.models import common as C
+from repro.serving import MultiModelServer, Request
+
+
+def _mk_requests(rng, m, n, vocab, max_new):
+    return [
+        Request(
+            instance=i % m,
+            prompt=rng.integers(1, vocab, size=int(rng.integers(3, 12))).tolist(),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def _drain(server, reqs) -> dict:
+    for r in reqs:
+        server.submit(r)
+    t0 = time.perf_counter()
+    results = server.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in results)
+    return {
+        "requests": len(results),
+        "tokens": toks,
+        "wall_s": dt,
+        "tok_per_s": toks / dt,
+        "decode_steps": server.steps,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    choices=sorted(registry.ASSIGNED))
+    ap.add_argument("--full", action="store_true",
+                    help="published config instead of the smoke config")
+    ap.add_argument("--num-instances", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-context", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    base = registry.get_config(args.arch) if args.full else registry.get_smoke_config(args.arch)
+    m = args.num_instances
+    max_context = args.max_context
+    if base.family == "hybrid":
+        from repro.models import hybrid as H
+        max_context = max(max_context, H.min_serving_context(base, args.max_new))
+    cfg1 = base.with_(num_instances=1)
+    cfg = base.with_(num_instances=m)
+
+    keys = jax.random.split(jax.random.PRNGKey(args.seed), m)
+    instances = [api.init(cfg1, k) for k in keys]
+    t0 = time.perf_counter()
+    merged = C.merge_instances(instances, api.axes(cfg1))
+    jax.block_until_ready(jax.tree.leaves(merged)[0])
+    merge_ms = (time.perf_counter() - t0) * 1e3
+
+    rng = np.random.default_rng(args.seed)
+    reqs = _mk_requests(rng, m, args.requests, cfg.vocab_size, args.max_new)
+
+    # servers are created ONCE and drained twice (warmup compiles, then
+    # the timed pass), so neither side pays compile time in the record —
+    # the delta under test is steady-state dispatch/batching, as in the
+    # paper's measurement
+    fused_server = MultiModelServer(
+        cfg, merged, slots_per_instance=args.slots,
+        max_context=max_context, temperature=0.0,
+    )
+
+    def fused_run():
+        steps0 = fused_server.steps
+        d = _drain(fused_server, [Request(r.instance, list(r.prompt), r.max_new_tokens)
+                                  for r in reqs])
+        d["decode_steps"] = fused_server.steps - steps0
+        return d
+
+    fused_run()                      # compile warmup
+    fused = fused_run()
+
+    # sequential baseline: M single-model servers, drained one at a time
+    ax = api.axes(cfg1)
+    solo = [
+        MultiModelServer(
+            cfg1, C.take_instance(merged, ax, i),
+            slots_per_instance=args.slots, max_context=max_context,
+            temperature=0.0,
+        )
+        for i in range(m)
+    ]
+
+    def sequential_run():
+        out = {"requests": 0, "tokens": 0, "wall_s": 0.0, "decode_steps": 0}
+        t0 = time.perf_counter()
+        for i, server in enumerate(solo):
+            steps0 = server.steps
+            mine = [Request(0, list(r.prompt), r.max_new_tokens)
+                    for r in reqs if r.instance == i]
+            d = _drain(server, mine)
+            out["requests"] += d["requests"]
+            out["tokens"] += d["tokens"]
+            out["decode_steps"] += server.steps - steps0
+        out["wall_s"] = time.perf_counter() - t0
+        out["tok_per_s"] = out["tokens"] / out["wall_s"]
+        return out
+
+    sequential_run()                 # compile warmup
+    seq = sequential_run()
+
+    record = {
+        "bench": "serve_fused_vs_sequential",
+        "arch": args.arch,
+        "family": cfg.family,
+        "smoke": not args.full,
+        "num_instances": m,
+        "slots_per_instance": args.slots,
+        "max_context": max_context,
+        "merge_ms": merge_ms,
+        "fused": fused,
+        "sequential": seq,
+        "speedup": seq["wall_s"] / fused["wall_s"],
+        "dispatch_amortization": seq["decode_steps"] / max(fused["decode_steps"], 1),
+    }
+    print(json.dumps(record, indent=2))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,28 @@ def abstract_cache(cfg, m, b, context_len):
     return jax.eval_shape(lambda: make_cache(cfg, m, b, context_len))
 
 
+def take_state(cfg: ModelConfig, cache, m, b):
+    """Slot surgery: slice slot (m, b) out of an (M, B)-grid cache/state
+    tree (singleton dims kept).  Works for every family — KV-cache stacks
+    and recurrent-state layouts alike; ssm/hybrid provide their own
+    helpers, the rest go through the generic axes-driven path."""
+    fam = family_module(cfg)
+    if hasattr(fam, "take_state"):
+        return fam.take_state(cfg, cache, m, b)
+    from repro.models.common import tree_take_slot
+    return tree_take_slot(cache, cache_axes(cfg), m, b)
+
+
+def put_state(cfg: ModelConfig, grid, one, m, b):
+    """Slot surgery: write a single-slot cache/state tree into grid slot
+    (m, b).  Inverse of :func:`take_state`."""
+    fam = family_module(cfg)
+    if hasattr(fam, "put_state"):
+        return fam.put_state(cfg, grid, one, m, b)
+    from repro.models.common import tree_put_slot
+    return tree_put_slot(grid, cache_axes(cfg), one, m, b)
+
+
 # ---------------------------------------------------------------------------
 # input specs (ShapeDtypeStructs — nothing allocated)
 # ---------------------------------------------------------------------------

@@ -71,9 +71,14 @@ def fused_matmul(
     block_t: int = 128,
     block_f: int = 128,
     block_d: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """x: (M,T,D) @ w: (M,D,F) [+ b: (M,F)] -> (M,T,F)."""
+    """x: (M,T,D) @ w: (M,D,F) [+ b: (M,F)] -> (M,T,F).
+
+    ``interpret=None`` auto-detects: compiled Mosaic on TPU, Pallas
+    interpreter elsewhere (kernel bodies execute on CPU for tests)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     m, t, d = x.shape
     f = w.shape[2]
     bt, bf, bd = _clamp(block_t, t), _clamp(block_f, f), _clamp(block_d, d)

@@ -2,10 +2,13 @@
 
 Trains nothing — initializes (or restores) M fine-tuned instances,
 merges them (the paper's offline merge step, timed), and serves batched
-requests from per-instance queues through the fused decode.
+requests from per-instance queues through the fused decode.  Every
+servable family works (dense / moe / vlm / audio / ssm / hybrid);
+admission policy, sampling and prefill bucketing are flags.  Per-instance
+throughput/latency/queue metrics are reported at the end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
-      --smoke --num-instances 4 --requests 32
+      --smoke --num-instances 4 --requests 32 --policy token-budget
 """
 from __future__ import annotations
 
@@ -18,7 +21,8 @@ import jax
 from repro import api
 from repro.configs import registry
 from repro.models import common as C
-from repro.serving import MultiModelServer, Request
+from repro.serving import MultiModelServer, Request, SERVABLE_FAMILIES
+from repro.serving.scheduler import POLICIES
 
 
 def main():
@@ -30,13 +34,23 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-context", type=int, default=128)
+    ap.add_argument("--policy", choices=sorted(POLICIES), default="fifo")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     base = registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
-    if base.family not in ("dense", "moe", "vlm"):
-        raise SystemExit("serve.py drives uniform-KVCache families; "
-                         "see examples/ for ssm/hybrid whole-batch serving")
+    if base.family not in SERVABLE_FAMILIES:
+        raise SystemExit(f"family {base.family!r} is not servable")
+    max_context = args.max_context
+    if base.family == "hybrid":
+        from repro.models import hybrid as H
+        need = H.min_serving_context(base, args.max_new)
+        if max_context < need:
+            print(f"raising --max-context {max_context} -> {need} "
+                  f"(hybrid meta tokens + SWA ring)")
+            max_context = need
     m = args.num_instances
     cfg1 = base.with_(num_instances=1)
     cfg = base.with_(num_instances=m)
@@ -52,8 +66,9 @@ def main():
     print(f"NetFuse merge of {m} instances: {(time.perf_counter()-t0)*1e3:.1f} ms")
 
     server = MultiModelServer(
-        cfg, merged, slots_per_instance=args.slots,
-        max_context=args.max_context, temperature=0.0,
+        cfg, merged, slots_per_instance=args.slots, max_context=max_context,
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        scheduler=args.policy,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -64,7 +79,9 @@ def main():
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results)
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {server.steps} fused decode steps)")
+          f"({toks/dt:.1f} tok/s, {server.steps} fused decode steps, "
+          f"policy={args.policy})")
+    print(server.metrics.format_table())
     for r in results[:4]:
         print(f"  req {r.request_id} (instance {r.instance}): {r.tokens[:8]}...")
 

@@ -241,3 +241,59 @@ def take_instance(params, axes_tree, i: int):
         lambda ax, l: jnp.take(l, jnp.array([i]), axis=_inst_axis(ax)),
         axes_tree, params, is_leaf=_is_axes_leaf,
     )
+
+
+def gather_instances(params, axes_tree, idx):
+    """Gather instance rows ``idx`` (k,) from a merged pytree -> a pytree
+    whose instances axis is k.  ``idx`` may be traced (jit-friendly); used
+    by the serving prefill to batch k requests for k different fine-tuned
+    models through ONE fused program (each request rides the instances
+    axis — paper §2.1 applied to admission instead of steady-state)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(
+        lambda ax, l: jnp.take(l, idx, axis=_inst_axis(ax)),
+        axes_tree, params, is_leaf=_is_axes_leaf,
+    )
+
+
+# ---------------------------------------------------------------------------
+# slot surgery on (M, B)-grid trees (KV caches / recurrent states)
+# ---------------------------------------------------------------------------
+#
+# Serving keeps one cache/state tree for the whole (M, B) slot grid; the
+# ``cache_axes``/``state_axes`` trees name where the instances/batch dims
+# sit on every leaf, so a single pair of helpers covers every family —
+# uniform KVCache stacks (dense/moe/vlm/audio) AND the nested recurrent
+# state layouts (ssm/hybrid).  Indices may be traced: one jit covers all
+# slots.
+
+
+def _is_axes_tuple(x) -> bool:
+    # logical-axes leaves are plain tuples of str/None; NamedTuple pytree
+    # nodes (KVCache) must NOT be treated as leaves.
+    return isinstance(x, tuple) and not hasattr(x, "_fields")
+
+
+def tree_take_slot(tree, axes_tree, m, b):
+    """Slice grid slot (m, b) from every leaf, keeping singleton dims."""
+    def _take(ax, leaf):
+        i, j = ax.index("instances"), ax.index("batch")
+        leaf = jax.lax.dynamic_slice_in_dim(leaf, m, 1, axis=i)
+        return jax.lax.dynamic_slice_in_dim(leaf, b, 1, axis=j)
+    return jax.tree.map(_take, axes_tree, tree, is_leaf=_is_axes_tuple)
+
+
+def tree_put_slot(grid, axes_tree, one, m, b):
+    """Write a single-slot tree (instances=batch=1 dims) into grid slot
+    (m, b).  Leaves whose ``cache_seq`` dim is longer/shorter than the
+    grid's are prefix-clipped (prefill caches vs. grid context)."""
+    def _put(ax, g, o):
+        i, j = ax.index("instances"), ax.index("batch")
+        if "cache_seq" in ax:
+            sa = ax.index("cache_seq")
+            s = min(o.shape[sa], g.shape[sa])
+            o = jax.lax.slice_in_dim(o, 0, s, axis=sa)
+        start = [jnp.int32(0)] * g.ndim
+        start[i], start[j] = m, b
+        return jax.lax.dynamic_update_slice(g, o.astype(g.dtype), tuple(start))
+    return jax.tree.map(_put, axes_tree, grid, one, is_leaf=_is_axes_tuple)

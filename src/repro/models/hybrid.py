@@ -67,6 +67,12 @@ def swa_window(cfg: ModelConfig) -> int:
     return cfg.sliding_window if cfg.sliding_window else DEFAULT_SWA
 
 
+def min_serving_context(cfg: ModelConfig, max_new: int = 0) -> int:
+    """Smallest serving max_context for this config: the SWA ring layout
+    needs meta tokens + a full window (plus decode headroom)."""
+    return NUM_META_TOKENS + swa_window(cfg) + max_new
+
+
 def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
     """(L,) int32 per-layer window (GLOBAL_WINDOW for global layers)."""
     g = global_layers(cfg)
@@ -533,3 +539,20 @@ def cache_axes(cfg):
             "conv": ("layers", "instances", "batch", None, "mlp"),
         },
     }
+
+
+def take_state(cfg, cache, m, b):
+    """Slice slot (m, b) out of the (M, B) hybrid cache (KV group caches
+    + per-layer mamba states), keeping singleton dims.  The SWA ring and
+    global caches keep their layouts, so a slot extracted here drops back
+    in with put_state without re-rotation."""
+    from repro.models.common import tree_take_slot
+    return tree_take_slot(cache, cache_axes(cfg), m, b)
+
+
+def put_state(cfg, grid, one, m, b):
+    """Write a single-slot hybrid cache into grid slot (m, b).  KV leaves
+    with a different cache_seq length are prefix-clipped (a per-request
+    prefill cache may be shorter than the serving grid's context)."""
+    from repro.models.common import tree_put_slot
+    return tree_put_slot(grid, cache_axes(cfg), one, m, b)

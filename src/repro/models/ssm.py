@@ -492,11 +492,15 @@ def forward(cfg, params, tokens, *, remat: bool = False):
     return L.unembed(x, params["lm_head"])
 
 
-def prefill(cfg, params, tokens):
-    """Returns (last logits, recurrent states) — the SSM 'cache'."""
+def prefill(cfg, params, tokens, *, state=None):
+    """Returns (last logits, recurrent states) — the SSM 'cache'.
+
+    ``state`` continues a previous prefill exactly (chunked prompt
+    processing: the serving admission path feeds fixed-size chunks so one
+    compile covers every prompt length — see serving/prefill.py)."""
     x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
     m, b, s = tokens.shape
-    states = make_state(cfg, m, b)
+    states = make_state(cfg, m, b) if state is None else state
     x, states = _trunk(cfg, params, x, states=states)
     x = L.rms_norm(x[:, :, -1:], params["final_norm"], cfg.norm_eps)
     return L.unembed(x, params["lm_head"])[:, :, 0], states
@@ -529,6 +533,20 @@ def make_state(cfg, m, b):
                 for kk, (sh, dt) in slstm_state_shape(cfg, m, b).items()
             })
     return st
+
+
+def take_state(cfg, state, m, b):
+    """Slice slot (m, b) out of an (M, B) recurrent-state grid, keeping
+    singleton dims — the recurrent-family counterpart of KV-cache slot
+    surgery (serving admission/eviction)."""
+    from repro.models.common import tree_take_slot
+    return tree_take_slot(state, state_axes(cfg), m, b)
+
+
+def put_state(cfg, grid, one, m, b):
+    """Write a single-slot state tree into grid slot (m, b)."""
+    from repro.models.common import tree_put_slot
+    return tree_put_slot(grid, state_axes(cfg), one, m, b)
 
 
 def state_axes(cfg):

@@ -1,1 +1,14 @@
-from repro.serving.engine import MultiModelServer, Request, Result
+from repro.serving.engine import MultiModelServer, SERVABLE_FAMILIES
+from repro.serving.metrics import ServerMetrics
+from repro.serving.prefill import BucketedPrefill, PrefillOut
+from repro.serving.sampling import sample_tokens
+from repro.serving.scheduler import (
+    POLICIES,
+    FIFOScheduler,
+    Request,
+    Result,
+    RoundRobinScheduler,
+    Scheduler,
+    TokenBudgetScheduler,
+    make_scheduler,
+)

@@ -1,67 +1,50 @@
 """Multi-model serving engine — the paper's deployment scenario.
 
 M fine-tuned instances of one architecture are NetFuse-merged and served
-from a single fused program.  The engine keeps one request queue per
-instance (different tasks have different input streams — paper §2.1) and
-a fixed (M, B) slot grid of KV-cache entries:
+from a single fused program.  The engine owns a fixed (M, B) slot grid
+of per-slot decode state and composes four subsystems:
 
-* incoming requests are prefilled one at a time (B'=1) and their KV
-  written into a free slot of their instance's row,
-* every engine step runs ONE fused decode for the whole (M, B) grid —
-  this is the kernel-launch (dispatch) amortization the paper measures,
-* slots finish independently (EOS / max_new_tokens) and are refilled
-  from their instance's queue — continuous batching at slot granularity
-  (per-slot positions; the decode path masks empty slots).
+* ``scheduler.py`` — policy-driven admission (fifo / round-robin /
+  token-budget fairness) over per-instance request queues (different
+  tasks have different input streams — paper §2.1),
+* ``prefill.py`` — length-bucketed, batched admission: k admitted
+  requests are prefilled in one fused call per length bucket (each
+  request rides the instances axis via an on-device weight-row gather),
+  instead of one compile + one call per prompt length,
+* ``sampling.py`` — greedy/temperature/top-k sampling over the whole
+  (M, B) logits grid, fused into the SAME jitted program as the decode
+  step: an engine step is exactly ONE device call, with zero per-slot
+  host round-trips,
+* ``metrics.py`` — per-instance throughput/latency/queue counters.
 
-Families with uniform KVCache (dense / moe / vlm) get slot-level cache
-surgery; recurrent-state families (ssm / hybrid) are served with
-whole-batch admission (documented limitation — their state swap is a
-different tree layout).
+Every servable family works at slot granularity: uniform-KVCache stacks
+(dense / moe / vlm / audio) and recurrent-state families (ssm / hybrid)
+both go through the axes-driven slot surgery in ``api.take_state`` /
+``api.put_state``, so slots finish independently (EOS / max_new_tokens)
+and are refilled from the queues — continuous batching at slot
+granularity; the decode path masks stale cache positions and idle slots
+simply sample into a discarded lane.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from collections import deque
-from typing import Callable
+import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro import api
-from repro.models.layers import KVCache
+from repro.serving.metrics import ServerMetrics
+from repro.serving.prefill import BucketedPrefill
+from repro.serving.sampling import make_grid_sampler
+from repro.serving.scheduler import Request, Result, Scheduler, make_scheduler
 
-
-@dataclasses.dataclass
-class Request:
-    instance: int                  # which fine-tuned model (task) this targets
-    prompt: list[int]
-    max_new_tokens: int = 16
-    request_id: int = -1
-
-
-@dataclasses.dataclass
-class Result:
-    request_id: int
-    instance: int
-    tokens: list[int]              # generated tokens (excluding prompt)
-
-
-def _write_slot(cache: KVCache, slot_cache: KVCache, m: int, b: int) -> KVCache:
-    """Write a single-request cache (L,1,1,S,KVH,hd) into grid slot (m,b)."""
-    def upd(grid, one):
-        s = min(one.shape[3], grid.shape[3])
-        return lax.dynamic_update_slice(
-            grid, one[:, :, :, :s].astype(grid.dtype), (0, m, b, 0, 0, 0)
-        )
-    return KVCache(k=upd(cache.k, slot_cache.k), v=upd(cache.v, slot_cache.v))
+SERVABLE_FAMILIES = ("dense", "moe", "vlm", "audio", "ssm", "hybrid")
 
 
 class MultiModelServer:
-    """Greedy/temperature decoding over an (M, B) slot grid."""
+    """Continuous-batching decode over an (M, B) slot grid."""
 
     def __init__(
         self,
@@ -72,95 +55,123 @@ class MultiModelServer:
         max_context: int,
         eos_id: int | None = None,
         temperature: float = 0.0,
+        top_k: int = 0,
         seed: int = 0,
+        scheduler: str | Scheduler = "fifo",
+        prefill_buckets: tuple[int, ...] | None = None,
+        recurrent_chunk: int = 16,
     ):
-        assert cfg.family in ("dense", "moe", "vlm"), (
-            "slot-level serving supports uniform-KVCache families; "
-            "ssm/hybrid use whole-batch serving (see examples)"
-        )
+        assert cfg.family in SERVABLE_FAMILIES, cfg.family
+        if cfg.family == "hybrid":
+            from repro.models import hybrid as H
+            need = H.min_serving_context(cfg)
+            assert max_context >= need, (
+                f"hybrid serving needs max_context >= meta+window = {need}, "
+                f"got {max_context}"
+            )
         self.cfg = cfg
         self.params = params
         self.m = cfg.num_instances
         self.b = slots_per_instance
         self.max_context = max_context
         self.eos_id = eos_id
-        self.temperature = temperature
-        self._key = jax.random.PRNGKey(seed)
-        self._req_counter = itertools.count()
+        self.scheduler = (
+            make_scheduler(scheduler, self.m) if isinstance(scheduler, str)
+            else scheduler
+        )
+        self.metrics = ServerMetrics(self.m)
+        self.prefill = BucketedPrefill(
+            cfg, max_context=max_context, buckets=prefill_buckets,
+            recurrent_chunk=recurrent_chunk, metrics=self.metrics,
+        )
 
-        self.queues: list[deque[Request]] = [deque() for _ in range(self.m)]
-        self.active: list[list[Request | None]] = [
-            [None] * self.b for _ in range(self.m)
-        ]
-        self.generated: dict[int, list[int]] = {}
         self.cache = api.make_cache(cfg, self.m, self.b, max_context)
         self.pos = np.zeros((self.m, self.b), np.int32)
         self.cur_tok = np.zeros((self.m, self.b), np.int32)
         self.slot_busy = np.zeros((self.m, self.b), bool)
+        self.active: list[list[Request | None]] = [
+            [None] * self.b for _ in range(self.m)
+        ]
+        self.generated: dict[int, list[int]] = {}
         self.steps = 0
+        self._req_counter = 0
+        self._key = jax.random.PRNGKey(seed)
 
-        self._decode = jax.jit(
-            lambda params, cache, tok, pos: api.decode_step(cfg, params, cache, tok, pos)
-        )
-        self._prefill = jax.jit(
-            lambda params, batch: api.prefill(cfg, params, batch, cache_len=max_context),
-            static_argnames=(),
+        sample = make_grid_sampler(temperature, top_k)
+
+        def _step_impl(params, cache, tok, pos, key):
+            logits, cache = api.decode_step(cfg, params, cache, tok[..., None], pos)
+            key, sub = jax.random.split(key)
+            return sample(logits, sub), cache, key
+
+        # donate the grid cache so decode/scatter update in place instead
+        # of copying the whole (M, B, max_context) grid (skipped on CPU,
+        # where XLA can't honor it and jit warns)
+        donate = jax.default_backend() != "cpu"
+        self._step = jax.jit(_step_impl, donate_argnums=(1,) if donate else ())
+        self._scatter = jax.jit(
+            lambda grid, src, i, mm, bb: api.put_state(
+                cfg, grid, api.take_state(cfg, src, i, 0), mm, bb
+            ),
+            donate_argnums=(0,) if donate else (),
         )
 
     # -- request admission ---------------------------------------------------
 
     def submit(self, req: Request) -> int:
-        req.request_id = next(self._req_counter)
-        self.queues[req.instance].append(req)
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if len(req.prompt) > self.prefill.max_prompt_len():
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the serving "
+                f"limit {self.prefill.max_prompt_len()}"
+            )
+        req.request_id = self._req_counter
+        self._req_counter += 1
+        req.submit_time = time.perf_counter()
+        self.scheduler.submit(req)
+        self.metrics.note_submit(req.instance)
         return req.request_id
 
     def _admit(self):
-        from repro.models import common as C
-        fam = api.family_module(self.cfg)
-        ax = fam.axes(self.cfg)
-        for m in range(self.m):
-            for b in range(self.b):
-                if self.slot_busy[m, b] or not self.queues[m]:
-                    continue
-                req = self.queues[m].popleft()
-                params_m = C.take_instance(self.params, ax, m)
-                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, None]}
-                if self.cfg.family == "vlm":
-                    batch["image_embeds"] = jnp.zeros(
-                        (1, 1, self.cfg.num_image_patches, self.cfg.vision_embed_dim),
-                        jnp.dtype(self.cfg.dtype),
-                    )
-                last_logits, slot_cache = self._prefill(params_m, batch)
-                self.cache = _write_slot(self.cache, slot_cache, m, b)
-                first_tok = self._sample(last_logits[0, 0])
-                plen = len(req.prompt) + (
-                    self.cfg.num_image_patches if self.cfg.family == "vlm" else 0
-                )
-                self.pos[m, b] = plen
-                self.cur_tok[m, b] = first_tok
-                self.slot_busy[m, b] = True
-                self.active[m][b] = req
-                self.generated[req.request_id] = [int(first_tok)]
-
-    def _sample(self, logits) -> int:
-        if self.temperature <= 0:
-            return int(jnp.argmax(logits))
-        self._key, sub = jax.random.split(self._key)
-        return int(jax.random.categorical(sub, logits / self.temperature))
+        free = {
+            i: int(self.b - self.slot_busy[i].sum()) for i in range(self.m)
+        }
+        if not any(free.values()) or self.scheduler.total_pending() == 0:
+            return
+        admits = self.scheduler.select(free)
+        if not admits:
+            return
+        free_slots = {
+            i: [b for b in range(self.b) if not self.slot_busy[i, b]]
+            for i in range(self.m)
+        }
+        outs = self.prefill.run(self.params, admits)
+        for req, out in zip(admits, outs):
+            m, b = req.instance, free_slots[req.instance].pop(0)
+            self.cache = self._scatter(self.cache, out.cache, out.index, m, b)
+            self.pos[m, b] = out.pos
+            self.cur_tok[m, b] = out.last_token
+            self.slot_busy[m, b] = True
+            self.active[m][b] = req
+            self.generated[req.request_id] = []
+            self.metrics.note_admit(m, len(req.prompt))
 
     # -- engine step ----------------------------------------------------------
 
     def step(self) -> list[Result]:
-        """Admit pending requests, run ONE fused decode over the whole
-        (M,B) grid, collect finished slots."""
+        """Admit pending requests, run ONE fused decode+sample over the
+        whole (M, B) grid, collect finished slots."""
         self._admit()
         if not self.slot_busy.any():
             return []
-        tok = jnp.asarray(self.cur_tok)[..., None]
-        pos = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, tok, pos)
+        nxt, self.cache, self._key = self._step(
+            self.params, self.cache,
+            jnp.asarray(self.cur_tok), jnp.asarray(self.pos), self._key,
+        )
         self.steps += 1
-        logits = np.asarray(jax.device_get(logits))
+        self.metrics.note_decode_step()
+        nxt = np.asarray(jax.device_get(nxt))
 
         done: list[Result] = []
         for m in range(self.m):
@@ -168,21 +179,27 @@ class MultiModelServer:
                 if not self.slot_busy[m, b]:
                     continue
                 req = self.active[m][b]
-                nxt = (
-                    int(np.argmax(logits[m, b])) if self.temperature <= 0
-                    else self._sample(jnp.asarray(logits[m, b]))
-                )
+                tok = int(nxt[m, b])
                 gen = self.generated[req.request_id]
-                gen.append(nxt)
+                self.metrics.note_token(
+                    m, first=not gen, submit_time=req.submit_time
+                )
+                self.scheduler.note_generated(m, 1)
+                gen.append(tok)
                 self.pos[m, b] += 1
-                self.cur_tok[m, b] = nxt
+                self.cur_tok[m, b] = tok
                 finished = (
                     len(gen) >= req.max_new_tokens
-                    or (self.eos_id is not None and nxt == self.eos_id)
+                    or (self.eos_id is not None and tok == self.eos_id)
                     or int(self.pos[m, b]) >= self.max_context - 1
                 )
                 if finished:
-                    done.append(Result(req.request_id, m, gen))
+                    done.append(Result(
+                        req.request_id, m, gen,
+                        prompt_len=len(req.prompt),
+                        latency_s=time.perf_counter() - req.submit_time,
+                    ))
+                    self.metrics.note_complete(m, req.submit_time)
                     self.slot_busy[m, b] = False
                     self.active[m][b] = None
                     del self.generated[req.request_id]
@@ -192,6 +209,6 @@ class MultiModelServer:
         out: list[Result] = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if not self.slot_busy.any() and all(not q for q in self.queues):
+            if not self.slot_busy.any() and self.scheduler.total_pending() == 0:
                 return out
         raise RuntimeError("serving did not drain")

@@ -1,0 +1,127 @@
+"""Per-instance serving metrics.
+
+The paper's deployment scenario is M task streams through one fused
+program; operators need to see each task's share.  ``ServerMetrics``
+keeps cheap host-side counters per instance — throughput, latency,
+time-to-first-token, queue depth — plus engine-wide counters (fused
+decode steps, prefill batches/compiles).  ``snapshot()`` returns plain
+dicts (JSON-able, used by benchmarks/serve_bench.py); ``format_table()``
+renders the per-instance report printed by ``repro.launch.serve``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class InstanceStats:
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+    queue_depth: int = 0           # current, updated on submit/admit
+    queue_peak: int = 0
+    ttft_sum: float = 0.0          # submit -> first generated token
+    ttft_n: int = 0
+    latency_sum: float = 0.0       # submit -> completion
+    latency_n: int = 0
+
+
+class ServerMetrics:
+    def __init__(self, num_instances: int, clock: Callable[[], float] = time.perf_counter):
+        self.m = num_instances
+        self.clock = clock
+        self.per_instance = [InstanceStats() for _ in range(num_instances)]
+        self.decode_steps = 0        # fused (M, B)-grid decode+sample calls
+        self.prefill_batches = 0     # bucketed prefill device calls
+        self.prefill_requests = 0    # requests admitted through them
+        self.started = clock()
+
+    # -- engine hooks --------------------------------------------------------
+
+    def note_submit(self, instance: int) -> None:
+        st = self.per_instance[instance]
+        st.submitted += 1
+        st.queue_depth += 1
+        st.queue_peak = max(st.queue_peak, st.queue_depth)
+
+    def note_admit(self, instance: int, prompt_len: int) -> None:
+        st = self.per_instance[instance]
+        st.admitted += 1
+        st.queue_depth -= 1
+        st.prompt_tokens += prompt_len
+
+    def note_prefill_batch(self, num_requests: int) -> None:
+        self.prefill_batches += 1
+        self.prefill_requests += num_requests
+
+    def note_decode_step(self) -> None:
+        self.decode_steps += 1
+
+    def note_token(self, instance: int, *, first: bool, submit_time: float) -> None:
+        st = self.per_instance[instance]
+        st.generated_tokens += 1
+        if first:
+            st.ttft_sum += self.clock() - submit_time
+            st.ttft_n += 1
+
+    def note_complete(self, instance: int, submit_time: float) -> None:
+        st = self.per_instance[instance]
+        st.completed += 1
+        st.latency_sum += self.clock() - submit_time
+        st.latency_n += 1
+
+    # -- reporting -----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        dt = max(self.clock() - self.started, 1e-9)
+        inst = []
+        for st in self.per_instance:
+            inst.append({
+                "submitted": st.submitted,
+                "admitted": st.admitted,
+                "completed": st.completed,
+                "queue_depth": st.queue_depth,
+                "queue_peak": st.queue_peak,
+                "prompt_tokens": st.prompt_tokens,
+                "generated_tokens": st.generated_tokens,
+                "tok_per_s": st.generated_tokens / dt,
+                "mean_ttft_s": st.ttft_sum / st.ttft_n if st.ttft_n else None,
+                "mean_latency_s": st.latency_sum / st.latency_n if st.latency_n else None,
+            })
+        return {
+            "wall_s": dt,
+            "decode_steps": self.decode_steps,
+            "prefill_batches": self.prefill_batches,
+            "prefill_requests": self.prefill_requests,
+            "generated_tokens": sum(s.generated_tokens for s in self.per_instance),
+            "tok_per_s": sum(s.generated_tokens for s in self.per_instance) / dt,
+            "instances": inst,
+        }
+
+    def format_table(self) -> str:
+        snap = self.snapshot()
+        hdr = (
+            f"{'inst':>4} {'done':>5} {'queue':>5} {'peak':>5} "
+            f"{'prompt':>7} {'gen':>7} {'tok/s':>8} {'ttft_ms':>8} {'lat_ms':>8}"
+        )
+        rows = [hdr, "-" * len(hdr)]
+        for i, st in enumerate(snap["instances"]):
+            ttft = f"{1e3 * st['mean_ttft_s']:.1f}" if st["mean_ttft_s"] is not None else "-"
+            lat = f"{1e3 * st['mean_latency_s']:.1f}" if st["mean_latency_s"] is not None else "-"
+            rows.append(
+                f"{i:>4} {st['completed']:>5} {st['queue_depth']:>5} "
+                f"{st['queue_peak']:>5} {st['prompt_tokens']:>7} "
+                f"{st['generated_tokens']:>7} {st['tok_per_s']:>8.1f} "
+                f"{ttft:>8} {lat:>8}"
+            )
+        rows.append(
+            f"total: {snap['generated_tokens']} tokens in {snap['wall_s']:.2f}s "
+            f"({snap['tok_per_s']:.1f} tok/s) — {snap['decode_steps']} fused decode "
+            f"steps, {snap['prefill_batches']} prefill batches "
+            f"({snap['prefill_requests']} requests)"
+        )
+        return "\n".join(rows)

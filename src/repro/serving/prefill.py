@@ -1,0 +1,258 @@
+"""Length-bucketed, batched prefill for serving admission.
+
+The old engine jitted ``api.prefill`` at the exact prompt shape — every
+new prompt length triggered a fresh XLA compile, and k admitted requests
+cost k device calls.  Admission here is compiled per *bucket*:
+
+* prompts are right-padded to the next length bucket (defaults are
+  powers of two clipped to the cache length), and up to a power-of-two
+  batch of requests is prefilled in ONE fused call — each request rides
+  the *instances* axis of the merged program via an on-device gather of
+  its model's weight rows (``gather_instances``), so requests targeting
+  different fine-tuned models still share the batch,
+* padded junk positions are harmless for KV-cache families: the grid
+  decode masks cache slots beyond the current position (see
+  DESIGN.md §6), and the engine re-decodes the last prompt token so no
+  logits need to be extracted at per-request offsets,
+* recurrent-state families can't absorb padded junk (state integrates
+  every step), so exactness is kept a different way: ssm prompts are
+  processed in fixed-size chunks through a state-carrying prefill (one
+  compile for the chunk, one for the single-token tail) and hybrid
+  prompts fall back to exact-length per-request prefill (documented
+  limitation: Hymba's meta-token attention + SWA ring make mid-prompt
+  cache chaining family-specific work).
+
+MoE caveat: expert capacity is computed over the padded token count, so
+a bucketed moe prefill may route marginal tokens differently from an
+exact-length prefill.  Greedy serving output equality is only guaranteed
+for dense/vlm (and tested there); moe serving is validated as a smoke
+path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.models.common import gather_instances
+
+DEFAULT_BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+KV_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class PrefillOut:
+    """One admitted request's prefill product.
+
+    ``cache`` is a cache/state tree whose instances axis holds this
+    request at row ``index`` (batched KV prefills share one tree across
+    the group; recurrent prefills are per-request with index 0).  The
+    engine scatters row ``index`` into the request's grid slot, then
+    seeds decode at ``pos`` with ``last_token`` — the last prompt token
+    is (re)decoded by the first fused grid step, so sampling stays fully
+    on-device and prefill never extracts per-request logits."""
+    cache: Any
+    index: int
+    pos: int
+    last_token: int
+
+
+class BucketedPrefill:
+    def __init__(
+        self,
+        cfg,
+        *,
+        max_context: int,
+        buckets: tuple[int, ...] | None = None,
+        recurrent_chunk: int = 16,
+        metrics=None,
+    ):
+        if cfg.family not in KV_FAMILIES + ("ssm", "hybrid"):
+            raise ValueError(f"family {cfg.family!r} is not servable")
+        self.cfg = cfg
+        self.family = cfg.family
+        self.max_context = max_context
+        self.metrics = metrics
+        self.chunk = max(1, recurrent_chunk)
+        self._axes = api.axes(cfg)
+        # KV prefill caches are built directly at the grid's cache length
+        # so slot scatter is a pure dynamic-update (no reshaping)
+        self.cache_len = (
+            (cfg.sliding_window or max_context) if cfg.family in KV_FAMILIES
+            else max_context
+        )
+        prefix = cfg.num_image_patches if cfg.family == "vlm" else 0
+        cap = self.cache_len - prefix
+        assert cap > 0, (self.cache_len, prefix)
+        base = buckets if buckets is not None else DEFAULT_BUCKETS
+        self.buckets = tuple(sorted({min(b, cap) for b in base} | {cap}))
+        self._fns: dict = {}          # (family-specific key) -> jitted fn
+        self._zero_state = None
+
+    # -- public --------------------------------------------------------------
+
+    def max_prompt_len(self) -> int:
+        """Longest admissible prompt (tokens)."""
+        if self.family == "hybrid":
+            from repro.models import hybrid as H
+            return self.max_context - H.NUM_META_TOKENS
+        if self.family == "ssm":
+            return self.max_context
+        return self.buckets[-1]
+
+    @property
+    def compiled_shapes(self) -> int:
+        return len(self._fns)
+
+    def run(self, params, reqs) -> list[PrefillOut]:
+        """Prefill the admitted requests; one PrefillOut per request, in
+        the same order."""
+        if self.family == "ssm":
+            return [self._run_ssm(params, r) for r in reqs]
+        if self.family == "hybrid":
+            return [self._run_hybrid(params, r) for r in reqs]
+        return self._run_kv(params, reqs)
+
+    # -- KV-cache families: padded bucket batches ----------------------------
+
+    def _bucket(self, n: int) -> int:
+        for s in self.buckets:
+            if s >= n:
+                return s
+        raise ValueError(
+            f"prompt of {n} tokens exceeds the largest bucket "
+            f"{self.buckets[-1]} (max_context={self.max_context})"
+        )
+
+    def _run_kv(self, params, reqs) -> list[PrefillOut]:
+        outs: list[PrefillOut | None] = [None] * len(reqs)
+        groups: dict[int, list[int]] = {}
+        for i, r in enumerate(reqs):
+            groups.setdefault(self._bucket(len(r.prompt)), []).append(i)
+        prefix = self.cfg.num_image_patches if self.family == "vlm" else 0
+        for s_b, idxs in sorted(groups.items()):
+            kb = _next_pow2(len(idxs))
+            toks = np.zeros((kb, 1, s_b), np.int32)
+            inst = np.zeros((kb,), np.int32)
+            for row, i in enumerate(idxs):
+                p = reqs[i].prompt
+                toks[row, 0, : len(p)] = p
+                inst[row] = reqs[i].instance
+            cache = self._kv_fn(s_b, kb)(params, jnp.asarray(inst), jnp.asarray(toks))
+            if self.metrics is not None:
+                self.metrics.note_prefill_batch(len(idxs))
+            for row, i in enumerate(idxs):
+                r = reqs[i]
+                outs[i] = PrefillOut(
+                    cache=cache, index=row,
+                    pos=prefix + len(r.prompt) - 1, last_token=r.prompt[-1],
+                )
+        return outs  # type: ignore[return-value]
+
+    def _kv_fn(self, s_b: int, kb: int):
+        key = ("kv", s_b, kb)
+        if key not in self._fns:
+            cfg = self.cfg
+
+            def fn(params, idx, tokens):
+                sub = gather_instances(params, self._axes, idx)
+                batch = {"tokens": tokens}
+                if cfg.family == "vlm":
+                    batch["image_embeds"] = jnp.zeros(
+                        (kb, 1, cfg.num_image_patches, cfg.vision_embed_dim),
+                        jnp.dtype(cfg.dtype),
+                    )
+                elif cfg.family == "audio":
+                    batch["frames"] = jnp.zeros(
+                        (kb, 1, cfg.num_audio_frames, cfg.d_model),
+                        jnp.dtype(cfg.dtype),
+                    )
+                _, cache = api.prefill(cfg, sub, batch, cache_len=self.cache_len)
+                return cache
+
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    # -- ssm: exact chunked state-carrying prefill ---------------------------
+
+    def _zero(self):
+        if self._zero_state is None:
+            from repro.models import ssm
+            self._zero_state = ssm.make_state(self.cfg, 1, 1)
+        return self._zero_state
+
+    def _run_ssm(self, params, req) -> PrefillOut:
+        toks = np.asarray(req.prompt[:-1], np.int32)
+        idx = jnp.asarray([req.instance], jnp.int32)
+        state = self._zero()
+        i, c = 0, self.chunk
+        while i + c <= len(toks):
+            state = self._ssm_fn(c)(
+                params, idx, jnp.asarray(toks[i : i + c]).reshape(1, 1, c), state
+            )
+            i += c
+        for t in toks[i:]:
+            state = self._ssm_fn(1)(
+                params, idx, jnp.full((1, 1, 1), t, jnp.int32), state
+            )
+        if self.metrics is not None:
+            self.metrics.note_prefill_batch(1)
+        return PrefillOut(
+            cache=state, index=0, pos=len(req.prompt) - 1,
+            last_token=req.prompt[-1],
+        )
+
+    def _ssm_fn(self, c: int):
+        key = ("ssm", c)
+        if key not in self._fns:
+            cfg = self.cfg
+            from repro.models import ssm
+
+            def fn(params, idx, tokens, state):
+                sub = gather_instances(params, self._axes, idx)
+                _, st = ssm.prefill(cfg, sub, tokens, state=state)
+                return st
+
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    # -- hybrid: exact-length per-request prefill ----------------------------
+
+    def _run_hybrid(self, params, req) -> PrefillOut:
+        from repro.models import hybrid as H
+        toks = np.asarray(req.prompt[:-1], np.int32).reshape(1, 1, -1)
+        cache = self._hybrid_fn(toks.shape[2])(
+            params, jnp.asarray([req.instance], jnp.int32), jnp.asarray(toks)
+        )
+        if self.metrics is not None:
+            self.metrics.note_prefill_batch(1)
+        return PrefillOut(
+            cache=cache, index=0,
+            pos=H.NUM_META_TOKENS + len(req.prompt) - 1,
+            last_token=req.prompt[-1],
+        )
+
+    def _hybrid_fn(self, s: int):
+        key = ("hybrid", s)
+        if key not in self._fns:
+            cfg = self.cfg
+
+            def fn(params, idx, tokens):
+                sub = gather_instances(params, self._axes, idx)
+                _, cache = api.prefill(cfg, sub, {"tokens": tokens})
+                return cache
+
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]

@@ -1,0 +1,53 @@
+"""Fully on-device sampling over the whole (M, B) serving grid.
+
+The old engine fetched the (M, B, V) logits to the host every decode
+step and ran per-slot ``np.argmax`` / ``jax.random.categorical`` — one
+host round-trip plus M*B tiny device calls per generated token.  Here
+the whole grid is sampled in ONE fused op that lives inside the same
+jitted program as the decode step (engine._step), so a serving step is
+exactly one device call regardless of M and B.
+
+Greedy (temperature <= 0), temperature and top-k sampling; every slot
+draws from an independent stream derived from one key (fold over the
+flat slot index), so results do not depend on which slots are busy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def sample_tokens(
+    logits: jax.Array,
+    key: jax.Array,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jax.Array:
+    """Sample next tokens for every slot. logits (M, B, V) -> (M, B) int32.
+
+    temperature <= 0 is greedy argmax (top_k ignored); otherwise logits
+    are scaled by 1/temperature, optionally truncated to the top_k
+    largest per slot, and sampled categorically."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    m, b, v = logits.shape
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_k > 0 and top_k < v:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, NEG_INF, scaled)
+    # per-slot independent streams from one key: fold in the slot index
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, jnp.arange(m * b, dtype=jnp.uint32)
+    )
+    flat = jax.vmap(jax.random.categorical)(keys, scaled.reshape(m * b, v))
+    return flat.reshape(m, b).astype(jnp.int32)
+
+
+def make_grid_sampler(temperature: float, top_k: int = 0):
+    """Closure over static sampling params (jit-stable)."""
+    return functools.partial(sample_tokens, temperature=temperature, top_k=top_k)

@@ -1,0 +1,173 @@
+"""Policy-driven admission scheduling for the multi-model server.
+
+The paper's deployment scenario (§2.1) has one request stream per merged
+instance; the serving engine exposes an (M, B) slot grid and asks the
+scheduler, once per engine step, which pending requests to admit into
+the free slots.  Three policies:
+
+* ``fifo`` — strict global arrival order (head-of-line requests whose
+  instance row is full are skipped over, not blocking other instances),
+* ``round-robin`` — cycle instances, taking one request per instance per
+  pass; equal *slot* share regardless of arrival pattern,
+* ``token-budget`` — least-total-tokens-served instance first (deficit
+  style fairness): instances that got fewer prompt+decode tokens win
+  ties for free slots, so one chatty task can't starve the others.
+
+Policies are pure host-side bookkeeping — no device work — so swapping
+them never changes compiled programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Iterable, Mapping
+
+
+@dataclasses.dataclass
+class Request:
+    instance: int                  # which fine-tuned model (task) this targets
+    prompt: list[int]
+    max_new_tokens: int = 16
+    request_id: int = -1
+    submit_time: float = 0.0       # host clock at submit (metrics)
+    _seq: int = -1                 # global arrival index (scheduler-owned)
+
+
+@dataclasses.dataclass
+class Result:
+    request_id: int
+    instance: int
+    tokens: list[int]              # generated tokens (excluding prompt)
+    prompt_len: int = 0
+    latency_s: float = 0.0
+
+
+class Scheduler:
+    """Base: per-instance FIFO queues + an admission policy in select()."""
+
+    name = "base"
+
+    def __init__(self, num_instances: int):
+        self.m = num_instances
+        self.queues: list[deque[Request]] = [deque() for _ in range(num_instances)]
+        self._arrival = itertools.count()
+
+    # -- queue side ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if not 0 <= req.instance < self.m:
+            raise ValueError(f"instance {req.instance} out of range [0, {self.m})")
+        req._seq = next(self._arrival)
+        self.queues[req.instance].append(req)
+
+    def depth(self, instance: int) -> int:
+        return len(self.queues[instance])
+
+    def total_pending(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    # -- accounting hook (token-budget fairness) ----------------------------
+    # The engine reports each generated token; prompt tokens are charged by
+    # the policy itself at admission (inside select).
+
+    def note_generated(self, instance: int, n: int) -> None:
+        pass
+
+    # -- policy -------------------------------------------------------------
+
+    def select(self, free: Mapping[int, int]) -> list[Request]:
+        """Pop and return the requests to admit this round.
+
+        ``free`` maps instance -> number of free slots in its row.  The
+        returned list is in admission order; never more than ``free[m]``
+        requests per instance."""
+        raise NotImplementedError
+
+
+class FIFOScheduler(Scheduler):
+    name = "fifo"
+
+    def select(self, free: Mapping[int, int]) -> list[Request]:
+        budget = dict(free)
+        heads = [q[0] for q in self.queues if q]
+        out = []
+        for req in sorted(heads, key=lambda r: r._seq):
+            # admit in arrival order, draining each chosen queue as far as
+            # this round's slots allow
+            q = self.queues[req.instance]
+            while q and budget.get(req.instance, 0) > 0:
+                out.append(q.popleft())
+                budget[req.instance] -= 1
+        return sorted(out, key=lambda r: r._seq)
+
+
+class RoundRobinScheduler(Scheduler):
+    name = "round-robin"
+
+    def __init__(self, num_instances: int):
+        super().__init__(num_instances)
+        self._cursor = 0
+
+    def select(self, free: Mapping[int, int]) -> list[Request]:
+        budget = dict(free)
+        out = []
+        progressed = True
+        while progressed:
+            progressed = False
+            for off in range(self.m):
+                i = (self._cursor + off) % self.m
+                if self.queues[i] and budget.get(i, 0) > 0:
+                    out.append(self.queues[i].popleft())
+                    budget[i] -= 1
+                    progressed = True
+            if progressed:
+                self._cursor = (self._cursor + 1) % self.m
+        return out
+
+
+class TokenBudgetScheduler(Scheduler):
+    """Least-total-tokens-served instance first.
+
+    ``served[i]`` accumulates prompt tokens at admission (charged inside
+    select) and generated tokens per decode step (the engine calls
+    note_generated); each admission round repeatedly picks the pending
+    instance with the smallest served count, charging its head request's
+    prompt immediately so a burst of long prompts on one instance yields
+    to the others."""
+
+    name = "token-budget"
+
+    def __init__(self, num_instances: int):
+        super().__init__(num_instances)
+        self.served = [0] * num_instances
+
+    def note_generated(self, instance: int, n: int) -> None:
+        self.served[instance] += n
+
+    def select(self, free: Mapping[int, int]) -> list[Request]:
+        budget = dict(free)
+        out = []
+        while True:
+            ready = [
+                i for i in range(self.m) if self.queues[i] and budget.get(i, 0) > 0
+            ]
+            if not ready:
+                return out
+            i = min(ready, key=lambda j: (self.served[j], j))
+            req = self.queues[i].popleft()
+            # charge the prompt now so the NEXT pick sees the updated share
+            self.served[i] += len(req.prompt)
+            out.append(req)
+            budget[i] -= 1
+
+
+POLICIES = {
+    c.name: c for c in (FIFOScheduler, RoundRobinScheduler, TokenBudgetScheduler)
+}
+
+
+def make_scheduler(policy: str, num_instances: int) -> Scheduler:
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+    return POLICIES[policy](num_instances)

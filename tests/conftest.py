@@ -1,0 +1,29 @@
+"""Shared test scaffolding.
+
+``hypothesis`` is an optional dependency: when it is missing, the
+property tests in test_fused_ops.py / test_kernels.py import no-op
+stand-ins for ``given``/``settings``/``st`` from here (module-level
+``pytest.importorskip`` would skip those files' non-hypothesis tests
+too).  ``given`` marks the test as skipped; ``st`` strategies evaluate
+to inert placeholders so decorator arguments still build.
+"""
+import pytest
+
+
+class _StrategyStub:
+    """Evaluates any strategy expression (st.integers(...), st.sampled_from
+    chains) to an inert placeholder."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _StrategyStub()
+
+
+def settings(*_a, **_k):
+    return lambda f: f
+
+
+def given(*_a, **_k):
+    return pytest.mark.skip(reason="hypothesis not installed")
