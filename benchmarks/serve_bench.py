@@ -9,13 +9,25 @@ tracked across PRs.
 
 Run: PYTHONPATH=src python benchmarks/serve_bench.py \
          [--arch tinyllama-1.1b] [--num-instances 4] [--requests 24] \
-         [--json-out serve_bench.json]
+         [--devices 8] [--mesh-shape 2x4] [--json-out serve_bench.json]
+
+``--devices N`` forces N host-platform devices (consumed before the
+first jax init) and serves the fused grid under a mesh (``--mesh-shape
+DxT``, default all-data); the JSON record then carries the mesh shape
+and per-device throughput.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+
+# --devices must be applied before the first jax backend init (the
+# device count locks there; importing jax below is still safe)
+from repro.launch.compat import force_host_devices_from_argv, mesh_from_args
+
+force_host_devices_from_argv(sys.argv)
 
 import numpy as np
 
@@ -66,8 +78,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-context", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host-platform devices and serve sharded")
+    ap.add_argument("--mesh-shape", default=None, metavar="DxT",
+                    help="(data, model) mesh shape, e.g. 2x4")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
+
+    mesh = mesh_from_args(args.devices, args.mesh_shape)
 
     base = registry.get_config(args.arch) if args.full else registry.get_smoke_config(args.arch)
     m = args.num_instances
@@ -94,7 +112,7 @@ def main():
     # paper's measurement
     fused_server = MultiModelServer(
         cfg, merged, slots_per_instance=args.slots,
-        max_context=max_context, temperature=0.0,
+        max_context=max_context, temperature=0.0, mesh=mesh,
     )
 
     def fused_run():
@@ -136,6 +154,7 @@ def main():
     sequential_run()                 # compile warmup
     seq = sequential_run()
 
+    num_devices = fused_server.metrics.num_devices
     record = {
         "bench": "serve_fused_vs_sequential",
         "arch": args.arch,
@@ -144,9 +163,15 @@ def main():
         "num_instances": m,
         "slots_per_instance": args.slots,
         "max_context": max_context,
+        "mesh": dict(mesh.shape) if mesh is not None else None,
+        "devices": num_devices,
         "merge_ms": merge_ms,
         "fused": fused,
         "sequential": seq,
+        # only a measured figure when actually serving sharded
+        "fused_tok_per_s_per_device": (
+            fused["tok_per_s"] / num_devices if mesh is not None else None
+        ),
         "speedup": seq["wall_s"] / fused["wall_s"],
         "dispatch_amortization": seq["decode_steps"] / max(fused["decode_steps"], 1),
     }

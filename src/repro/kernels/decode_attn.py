@@ -109,3 +109,45 @@ def decode_attention(
 def _vmem(shape, dtype):
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, dtype)
+
+
+def decode_attention_sharded(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_len: jax.Array,
+    *,
+    rules,
+    **kw,
+) -> jax.Array:
+    """``decode_attention`` under ``shard_map`` on the rules' mesh.
+
+    Serving layout: (M, B) rides the data axes and KV-head groups ride
+    "model" — each rank owns a slice of kv heads plus their grouped q
+    heads end-to-end (q heads are laid out kvh-major, so a contiguous
+    H-split of KVH/n groups matches a contiguous KVH-split), runs the
+    Pallas flash-decode kernel on its local block and writes its output
+    shard.  Exact with no collectives; interpret-mode fallback intact.
+    Falls back to the plain (GSPMD-partitioned) call when KVH doesn't
+    divide the model axis.
+    """
+    from repro.launch.compat import shard_map
+
+    m, b, h, hd = q.shape
+    s, kvh = k.shape[2], k.shape[3]
+    n_model = rules._axis_size(rules.mapping.get("kv_heads"))
+    if n_model <= 1 or kvh % n_model or h % n_model:
+        return decode_attention(q, k, v, kv_len, **kw)
+
+    q_spec = rules.spec(("instances", "batch", "kv_heads", None), (m, b, h, hd))
+    kv_spec = rules.spec(
+        ("instances", "batch", None, "kv_heads", None), (m, b, s, kvh, hd)
+    )
+    len_spec = rules.spec(("instances", "batch"), (m, b))
+    return shard_map(
+        lambda ql, kl, vl, ll: decode_attention(ql, kl, vl, ll, **kw),
+        mesh=rules.mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, len_spec),
+        out_specs=q_spec,
+        check_vma=False,
+    )(q, k, v, kv_len)

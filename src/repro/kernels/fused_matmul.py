@@ -115,3 +115,44 @@ def pltpu_scratch(bt: int, bf: int):
     """f32 VMEM accumulator scratch (TPU memory space)."""
     from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM((bt, bf), jnp.float32)
+
+
+def fused_matmul_sharded(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    rules,
+    **kw,
+) -> jax.Array:
+    """``fused_matmul`` under ``shard_map`` on the rules' mesh.
+
+    The (M, T, F) problem is embarrassingly parallel under the serving
+    layout: instances (M) ride the data axes and output features (F —
+    logical ``mlp``) ride "model", so each rank runs the Pallas kernel
+    on its local (M_l, T, D) x (M_l, D, F_l) block — no collectives, and
+    the interpret-mode fallback inside :func:`fused_matmul` is intact
+    (the per-rank body is an ordinary pallas_call).  Dims that don't
+    divide their mesh axes replicate via the rules' divisibility guard,
+    so any shape is accepted.
+    """
+    from repro.launch.compat import shard_map
+
+    m, t, d = x.shape
+    f = w.shape[2]
+    x_spec = rules.spec(("instances", None, None), (m, t, d))
+    w_spec = rules.spec(("instances", None, "mlp"), (m, d, f))
+    o_spec = rules.spec(("instances", None, "mlp"), (m, t, f))
+
+    if b is None:
+        return shard_map(
+            lambda xl, wl: fused_matmul(xl, wl, **kw),
+            mesh=rules.mesh, in_specs=(x_spec, w_spec), out_specs=o_spec,
+            check_vma=False,
+        )(x, w)
+    b_spec = rules.spec(("instances", "mlp"), b.shape)
+    return shard_map(
+        lambda xl, wl, bl: fused_matmul(xl, wl, bl, **kw),
+        mesh=rules.mesh, in_specs=(x_spec, w_spec, b_spec), out_specs=o_spec,
+        check_vma=False,
+    )(x, w, b)

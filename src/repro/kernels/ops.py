@@ -17,7 +17,9 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.decode_attn import decode_attention as _decode_attention_pl
+from repro.kernels.decode_attn import decode_attention_sharded as _decode_attention_sh
 from repro.kernels.fused_matmul import fused_matmul as _fused_matmul_pl
+from repro.kernels.fused_matmul import fused_matmul_sharded as _fused_matmul_sh
 from repro.kernels.group_norm import group_rms_norm as _group_rms_norm_pl
 from repro.kernels.slstm_cell import slstm_cell as _slstm_cell_pl
 
@@ -29,9 +31,14 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def fused_matmul(x, w, b=None, *, use_pallas: bool = True, **kw):
+def fused_matmul(x, w, b=None, *, use_pallas: bool = True, rules=None, **kw):
+    """``rules=`` (a models.common.Rules) runs the kernel under
+    shard_map on the rules' mesh — instances data-parallel, output
+    features tensor-parallel; see fused_matmul_sharded."""
     if not use_pallas:
         return ref.fused_matmul(x, w, b)
+    if rules is not None:
+        return _fused_matmul_sh(x, w, b, rules=rules, interpret=_interpret(), **kw)
     return _fused_matmul_pl(x, w, b, interpret=_interpret(), **kw)
 
 
@@ -41,9 +48,14 @@ def group_rms_norm(x, scale, *, eps: float = 1e-5, use_pallas: bool = True, **kw
     return _group_rms_norm_pl(x, scale, eps=eps, interpret=_interpret(), **kw)
 
 
-def decode_attention(q, k, v, kv_len, *, use_pallas: bool = True, **kw):
+def decode_attention(q, k, v, kv_len, *, use_pallas: bool = True, rules=None, **kw):
+    """``rules=`` runs the kernel under shard_map — (M, B) data-parallel,
+    kv-head groups tensor-parallel; see decode_attention_sharded."""
     if not use_pallas:
         return ref.decode_attention(q, k, v, kv_len)
+    if rules is not None:
+        return _decode_attention_sh(q, k, v, kv_len, rules=rules,
+                                    interpret=_interpret(), **kw)
     return _decode_attention_pl(q, k, v, kv_len, interpret=_interpret(), **kw)
 
 

@@ -30,6 +30,7 @@ from repro import api
 from repro.configs.base import SHAPES
 from repro.configs import registry
 from repro.launch import hlo_analysis
+from repro.launch.compat import set_mesh
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh, num_chips
 from repro.launch.shardings import (
     batch_shardings, dp_train_rules, moe_dp_compute, moe_ep_shmap,
@@ -245,7 +246,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             cfg = cfg.with_(mlstm_chunk=128)
         mesh = make_production_mesh(multi_pod=multi_pod)
         rules, opt_rules, micro = rules_for(mesh, shape.kind, tag, arch=arch)
-        with jax.set_mesh(mesh), rules:
+        with set_mesh(mesh), rules:
             fn, args, in_sh = build_lowerable(
                 cfg, shape, mesh, rules, opt_rules=opt_rules,
                 micro_override=micro,

@@ -9,11 +9,23 @@ throughput/latency/queue metrics are reported at the end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
       --smoke --num-instances 4 --requests 32 --policy token-budget
+
+Mesh-parametric serving: ``--devices N`` forces N host-platform devices
+(must be consumed before jax initializes) and ``--mesh-shape DxT``
+serves the (M, B) grid under a (data=D, model=T) mesh — slot surgery,
+prefill, decode and sampling all run sharded (engine ``mesh=``).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+# --devices must win before the first jax backend init (the device
+# count locks there; importing jax below is still safe)
+from repro.launch.compat import force_host_devices_from_argv, mesh_from_args
+
+force_host_devices_from_argv(sys.argv)
 
 import numpy as np
 import jax
@@ -38,6 +50,11 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host-platform devices (0 = real devices)")
+    ap.add_argument("--mesh-shape", default=None, metavar="DxT",
+                    help="serve under a (data=D, model=T) mesh, e.g. 2x4; "
+                         "default with --devices: all devices on data")
     args = ap.parse_args()
 
     base = registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
@@ -65,10 +82,14 @@ def main():
     jax.block_until_ready(jax.tree.leaves(merged)[0])
     print(f"NetFuse merge of {m} instances: {(time.perf_counter()-t0)*1e3:.1f} ms")
 
+    mesh = mesh_from_args(args.devices, args.mesh_shape)
+    if mesh is not None:
+        print(f"serving mesh: {dict(mesh.shape)} over {mesh.size} devices")
+
     server = MultiModelServer(
         cfg, merged, slots_per_instance=args.slots, max_context=max_context,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
-        scheduler=args.policy,
+        scheduler=args.policy, mesh=mesh,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()

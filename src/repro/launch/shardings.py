@@ -61,6 +61,16 @@ def serve_rules(mesh) -> Rules:
     })
 
 
+def default_serve_rules(mesh, rules: Rules | None = None) -> Rules | None:
+    """Resolve the serving layer's ``mesh=``/``rules=`` pair: no mesh ->
+    no rules (plain single-device path); a mesh without explicit rules
+    -> :func:`serve_rules`.  Shared by the engine and BucketedPrefill so
+    their defaults can't drift."""
+    if mesh is None:
+        return None
+    return rules if rules is not None else serve_rules(mesh)
+
+
 def train_rules(mesh, *, fsdp: bool = True) -> Rules:
     r = serve_rules(mesh)
     if fsdp:

@@ -78,11 +78,12 @@ def main():
         )
 
     if args.mesh:
+        from repro.launch.compat import set_mesh
         from repro.launch.shardings import train_rules
         n = jax.device_count()
         mesh = jax.make_mesh((n, 1), ("data", "model"))
         print(f"mesh=(data={n}, model=1); rules active (constrain/shard_map paths engaged)")
-        with jax.set_mesh(mesh), train_rules(mesh):
+        with set_mesh(mesh), train_rules(mesh):
             state, losses = run()
     else:
         state, losses = run()

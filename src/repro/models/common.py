@@ -137,6 +137,10 @@ class Rules:
                     mesh_axes = None  # a mesh axis may appear once per spec
                 else:
                     used.update(flat)
+                    # singleton tuples unwrap to the bare axis name: some
+                    # JAX versions don't canonicalize P(("data",)) ==
+                    # P("data"), and specs must compare stably
+                    mesh_axes = flat[0] if len(flat) == 1 else flat
             parts.append(mesh_axes)
         return P(*parts)
 
@@ -163,6 +167,27 @@ def constrain(x: jax.Array, *logical: str | None) -> jax.Array:
         return x
     spec = _ACTIVE_RULES.spec(logical, x.shape)
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_axes(x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """``constrain`` taking the logical-axes tuple a param/cache leaf
+    already carries (no-op without active rules)."""
+    if _ACTIVE_RULES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, _ACTIVE_RULES.spec(axes, x.shape))
+
+
+def constrain_tree(tree, axes_tree):
+    """Constrain every leaf of ``tree`` to its logical axes under the
+    active rules — the whole-pytree form of :func:`constrain_axes`, used
+    by the mesh-parametric serving jits to pin cache/state trees to the
+    rules' layout (no-op without active rules)."""
+    if _ACTIVE_RULES is None:
+        return tree
+    return jax.tree.map(
+        lambda ax, l: constrain_axes(l, ax), axes_tree, tree,
+        is_leaf=_is_axes_tuple,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -275,18 +300,30 @@ def _is_axes_tuple(x) -> bool:
 
 
 def tree_take_slot(tree, axes_tree, m, b):
-    """Slice grid slot (m, b) from every leaf, keeping singleton dims."""
+    """Slice grid slot (m, b) from every leaf, keeping singleton dims.
+
+    Shard-safe: when rules are active the sliced singleton leaf is
+    re-constrained to its logical axes (the instances/batch dims collapse
+    to 1 and replicate via the divisibility guard; other dims — e.g. a
+    context-sharded ``cache_seq`` — keep their mesh placement), so slot
+    extraction under a mesh never forces a host gather."""
     def _take(ax, leaf):
         i, j = ax.index("instances"), ax.index("batch")
         leaf = jax.lax.dynamic_slice_in_dim(leaf, m, 1, axis=i)
-        return jax.lax.dynamic_slice_in_dim(leaf, b, 1, axis=j)
+        leaf = jax.lax.dynamic_slice_in_dim(leaf, b, 1, axis=j)
+        return constrain_axes(leaf, ax)
     return jax.tree.map(_take, axes_tree, tree, is_leaf=_is_axes_tuple)
 
 
 def tree_put_slot(grid, axes_tree, one, m, b):
     """Write a single-slot tree (instances=batch=1 dims) into grid slot
     (m, b).  Leaves whose ``cache_seq`` dim is longer/shorter than the
-    grid's are prefix-clipped (prefill caches vs. grid context)."""
+    grid's are prefix-clipped (prefill caches vs. grid context).
+
+    Shard-safe: the updated grid leaf is constrained back to its logical
+    axes, so surgery under a mesh preserves every leaf's NamedSharding
+    (the dynamic-update lowers to an on-device scatter into the owning
+    shards — the grid never round-trips through the host)."""
     def _put(ax, g, o):
         i, j = ax.index("instances"), ax.index("batch")
         if "cache_seq" in ax:
@@ -295,5 +332,6 @@ def tree_put_slot(grid, axes_tree, one, m, b):
             o = jax.lax.slice_in_dim(o, 0, s, axis=sa)
         start = [jnp.int32(0)] * g.ndim
         start[i], start[j] = m, b
-        return jax.lax.dynamic_update_slice(g, o.astype(g.dtype), tuple(start))
+        out = jax.lax.dynamic_update_slice(g, o.astype(g.dtype), tuple(start))
+        return constrain_axes(out, ax)
     return jax.tree.map(_put, axes_tree, grid, one, is_leaf=_is_axes_tuple)

@@ -17,6 +17,18 @@ of per-slot decode state and composes four subsystems:
   host round-trips,
 * ``metrics.py`` — per-instance throughput/latency/queue counters.
 
+Mesh-parametric execution: pass ``mesh=`` (and optionally ``rules=``) to
+run the WHOLE serving path — slot surgery, bucketed prefill, the fused
+decode+sample step, metrics — under an explicit ``jax.sharding.Mesh``
+with the instances/batch axes data-parallel and heads/cache_seq tensor-
+parallel (the logical-axis rules in ``launch/shardings.py``).  Params
+and the grid cache are ``jax.device_put`` once at init with per-leaf
+``NamedSharding``; every jit traces under the mesh + rules context so
+the model zoo's ``constrain`` calls and the shard-safe slot surgery
+(``models/common.tree_take_slot``/``tree_put_slot``) pin layouts — no
+host gathers anywhere in the steady state.  ``mesh=None`` (default) is
+bit-for-bit today's single-device path.
+
 Every servable family works at slot granularity: uniform-KVCache stacks
 (dense / moe / vlm / audio) and recurrent-state families (ssm / hybrid)
 both go through the axes-driven slot surgery in ``api.take_state`` /
@@ -35,6 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import api
+from repro.launch.compat import mesh_context
+from repro.models import common as C
 from repro.serving.metrics import ServerMetrics
 from repro.serving.prefill import BucketedPrefill
 from repro.serving.sampling import make_grid_sampler
@@ -60,6 +74,8 @@ class MultiModelServer:
         scheduler: str | Scheduler = "fifo",
         prefill_buckets: tuple[int, ...] | None = None,
         recurrent_chunk: int = 16,
+        mesh=None,
+        rules=None,
     ):
         assert cfg.family in SERVABLE_FAMILIES, cfg.family
         if cfg.family == "hybrid":
@@ -70,22 +86,46 @@ class MultiModelServer:
                 f"got {max_context}"
             )
         self.cfg = cfg
-        self.params = params
         self.m = cfg.num_instances
         self.b = slots_per_instance
         self.max_context = max_context
         self.eos_id = eos_id
+
+        from repro.launch.shardings import default_serve_rules
+        self.mesh = mesh
+        self.rules = default_serve_rules(mesh, rules)
+
         self.scheduler = (
-            make_scheduler(scheduler, self.m) if isinstance(scheduler, str)
-            else scheduler
+            make_scheduler(scheduler, self.m, mesh=mesh, rules=self.rules)
+            if isinstance(scheduler, str) else scheduler
         )
-        self.metrics = ServerMetrics(self.m)
+        self.metrics = ServerMetrics(self.m, mesh=mesh)
         self.prefill = BucketedPrefill(
             cfg, max_context=max_context, buckets=prefill_buckets,
             recurrent_chunk=recurrent_chunk, metrics=self.metrics,
+            mesh=mesh, rules=self.rules,
         )
 
+        self.params = params
         self.cache = api.make_cache(cfg, self.m, self.b, max_context)
+        self._grid_shard = self._rep_shard = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.shardings import tree_shardings
+            # per-leaf NamedSharding for params and the grid cache, then
+            # device_put ONCE — everything downstream consumes committed,
+            # rules-conformant arrays
+            self.params = jax.device_put(
+                params, tree_shardings(self.rules, api.axes(cfg), params)
+            )
+            self.cache = jax.device_put(
+                self.cache,
+                tree_shardings(self.rules, api.cache_axes(cfg), self.cache),
+            )
+            self._grid_shard = NamedSharding(
+                mesh, self.rules.spec(("instances", "batch"), (self.m, self.b))
+            )
+            self._rep_shard = NamedSharding(mesh, P())
         self.pos = np.zeros((self.m, self.b), np.int32)
         self.cur_tok = np.zeros((self.m, self.b), np.int32)
         self.slot_busy = np.zeros((self.m, self.b), bool)
@@ -96,11 +136,18 @@ class MultiModelServer:
         self.steps = 0
         self._req_counter = 0
         self._key = jax.random.PRNGKey(seed)
+        if mesh is not None:
+            self._key = jax.device_put(self._key, self._rep_shard)
 
         sample = make_grid_sampler(temperature, top_k)
+        cache_ax = api.cache_axes(cfg)
 
         def _step_impl(params, cache, tok, pos, key):
             logits, cache = api.decode_step(cfg, params, cache, tok[..., None], pos)
+            # pin the grid cache to the rules' layout across steps (no-op
+            # without active rules), so donation reuses the buffers and
+            # the layout never drifts from the init-time device_put
+            cache = C.constrain_tree(cache, cache_ax)
             key, sub = jax.random.split(key)
             return sample(logits, sub), cache, key
 
@@ -115,6 +162,11 @@ class MultiModelServer:
             ),
             donate_argnums=(0,) if donate else (),
         )
+
+    def _ctx(self):
+        """Mesh + rules context for every trace/dispatch (no-op without a
+        mesh — jit still traces, just with no active rules)."""
+        return mesh_context(self.mesh, self.rules)
 
     # -- request admission ---------------------------------------------------
 
@@ -149,7 +201,8 @@ class MultiModelServer:
         outs = self.prefill.run(self.params, admits)
         for req, out in zip(admits, outs):
             m, b = req.instance, free_slots[req.instance].pop(0)
-            self.cache = self._scatter(self.cache, out.cache, out.index, m, b)
+            with self._ctx():
+                self.cache = self._scatter(self.cache, out.cache, out.index, m, b)
             self.pos[m, b] = out.pos
             self.cur_tok[m, b] = out.last_token
             self.slot_busy[m, b] = True
@@ -165,10 +218,16 @@ class MultiModelServer:
         self._admit()
         if not self.slot_busy.any():
             return []
-        nxt, self.cache, self._key = self._step(
-            self.params, self.cache,
-            jnp.asarray(self.cur_tok), jnp.asarray(self.pos), self._key,
-        )
+        if self.mesh is not None:
+            # one host->device transfer straight to the grid sharding
+            tok = jax.device_put(self.cur_tok, self._grid_shard)
+            pos = jax.device_put(self.pos, self._grid_shard)
+        else:
+            tok, pos = jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
+        with self._ctx():
+            nxt, self.cache, self._key = self._step(
+                self.params, self.cache, tok, pos, self._key,
+            )
         self.steps += 1
         self.metrics.note_decode_step()
         nxt = np.asarray(jax.device_get(nxt))

@@ -31,7 +31,8 @@ class InstanceStats:
 
 
 class ServerMetrics:
-    def __init__(self, num_instances: int, clock: Callable[[], float] = time.perf_counter):
+    def __init__(self, num_instances: int,
+                 clock: Callable[[], float] = time.perf_counter, mesh=None):
         self.m = num_instances
         self.clock = clock
         self.per_instance = [InstanceStats() for _ in range(num_instances)]
@@ -39,6 +40,10 @@ class ServerMetrics:
         self.prefill_batches = 0     # bucketed prefill device calls
         self.prefill_requests = 0    # requests admitted through them
         self.started = clock()
+        # mesh-parametric serving: record the grid's mesh geometry so
+        # snapshots carry per-device throughput (serve_bench JSON)
+        self.mesh_shape = dict(mesh.shape) if mesh is not None else None
+        self.num_devices = mesh.size if mesh is not None else 1
 
     # -- engine hooks --------------------------------------------------------
 
@@ -92,15 +97,22 @@ class ServerMetrics:
                 "mean_ttft_s": st.ttft_sum / st.ttft_n if st.ttft_n else None,
                 "mean_latency_s": st.latency_sum / st.latency_n if st.latency_n else None,
             })
-        return {
+        gen = sum(s.generated_tokens for s in self.per_instance)
+        out = {
             "wall_s": dt,
             "decode_steps": self.decode_steps,
             "prefill_batches": self.prefill_batches,
             "prefill_requests": self.prefill_requests,
-            "generated_tokens": sum(s.generated_tokens for s in self.per_instance),
-            "tok_per_s": sum(s.generated_tokens for s in self.per_instance) / dt,
+            "generated_tokens": gen,
+            "tok_per_s": gen / dt,
             "instances": inst,
         }
+        if self.mesh_shape is not None:
+            out["mesh"] = {
+                "shape": self.mesh_shape, "devices": self.num_devices,
+            }
+            out["tok_per_s_per_device"] = gen / dt / self.num_devices
+        return out
 
     def format_table(self) -> str:
         snap = self.snapshot()

@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import api
-from repro.models.common import gather_instances
+from repro.launch.compat import mesh_context
+from repro.models.common import constrain_tree, gather_instances
 
 DEFAULT_BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 KV_FAMILIES = ("dense", "moe", "vlm", "audio")
@@ -78,6 +79,8 @@ class BucketedPrefill:
         buckets: tuple[int, ...] | None = None,
         recurrent_chunk: int = 16,
         metrics=None,
+        mesh=None,
+        rules=None,
     ):
         if cfg.family not in KV_FAMILIES + ("ssm", "hybrid"):
             raise ValueError(f"family {cfg.family!r} is not servable")
@@ -87,6 +90,14 @@ class BucketedPrefill:
         self.metrics = metrics
         self.chunk = max(1, recurrent_chunk)
         self._axes = api.axes(cfg)
+        # mesh-parametric admission: every prefill jit traces under the
+        # mesh + rules context (model-zoo constrain calls engage) and the
+        # produced cache/state tree is pinned to the rules' layout, so
+        # the engine's slot scatter consumes already-sharded trees
+        from repro.launch.shardings import default_serve_rules
+        self.mesh = mesh
+        self.rules = default_serve_rules(mesh, rules)
+        self._cache_axes = api.cache_axes(cfg)
         # KV prefill caches are built directly at the grid's cache length
         # so slot scatter is a pure dynamic-update (no reshaping)
         self.cache_len = (
@@ -119,11 +130,12 @@ class BucketedPrefill:
     def run(self, params, reqs) -> list[PrefillOut]:
         """Prefill the admitted requests; one PrefillOut per request, in
         the same order."""
-        if self.family == "ssm":
-            return [self._run_ssm(params, r) for r in reqs]
-        if self.family == "hybrid":
-            return [self._run_hybrid(params, r) for r in reqs]
-        return self._run_kv(params, reqs)
+        with mesh_context(self.mesh, self.rules):
+            if self.family == "ssm":
+                return [self._run_ssm(params, r) for r in reqs]
+            if self.family == "hybrid":
+                return [self._run_hybrid(params, r) for r in reqs]
+            return self._run_kv(params, reqs)
 
     # -- KV-cache families: padded bucket batches ----------------------------
 
@@ -180,7 +192,7 @@ class BucketedPrefill:
                         jnp.dtype(cfg.dtype),
                     )
                 _, cache = api.prefill(cfg, sub, batch, cache_len=self.cache_len)
-                return cache
+                return constrain_tree(cache, self._cache_axes)
 
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
@@ -223,7 +235,7 @@ class BucketedPrefill:
             def fn(params, idx, tokens, state):
                 sub = gather_instances(params, self._axes, idx)
                 _, st = ssm.prefill(cfg, sub, tokens, state=state)
-                return st
+                return constrain_tree(st, self._cache_axes)
 
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
@@ -252,7 +264,7 @@ class BucketedPrefill:
             def fn(params, idx, tokens):
                 sub = gather_instances(params, self._axes, idx)
                 _, cache = api.prefill(cfg, sub, {"tokens": tokens})
-                return cache
+                return constrain_tree(cache, self._cache_axes)
 
             self._fns[key] = jax.jit(fn)
         return self._fns[key]

@@ -15,13 +15,24 @@ the free slots.  Three policies:
 
 Policies are pure host-side bookkeeping — no device work — so swapping
 them never changes compiled programs.
+
+Mesh-aware admission: under a mesh the grid's instance rows shard over
+the data axes in contiguous blocks, so each instance lives on ONE
+data-parallel device group.  Schedulers accept ``mesh=`` and expose
+``data_shard_of(instance)``; ``token-budget`` uses it to break served-
+token ties toward the least-loaded device group, spreading decode work
+across the data axis.  Without a mesh every instance maps to shard 0
+and behavior is exactly the single-device policy.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from collections import deque
 from typing import Iterable, Mapping
+
+from repro.models.common import Rules
 
 
 @dataclasses.dataclass
@@ -48,10 +59,38 @@ class Scheduler:
 
     name = "base"
 
-    def __init__(self, num_instances: int):
+    def __init__(self, num_instances: int, mesh=None, rules=None):
         self.m = num_instances
         self.queues: list[deque[Request]] = [deque() for _ in range(num_instances)]
         self._arrival = itertools.count()
+        self.mesh = mesh
+        # instances shard contiguously over the mesh axes the rules
+        # actually give the "instances" logical dim (Rules.spec applies
+        # the suffix-drop/dedup guards, so the shard map matches the
+        # grid's real placement — e.g. M=2 on ("pod","data")=(2,4)
+        # shards 2-way over "pod"); without explicit rules, fall back to
+        # the serve-rules batch axes
+        ndata = 1
+        if mesh is not None:
+            if rules is None:
+                axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+                entry = Rules(mesh, {"instances": axes}).spec(
+                    ("instances",), (num_instances,))[0]
+            else:
+                entry = rules.spec(("instances",), (num_instances,))[0]
+            if entry is not None:
+                flat = (entry,) if isinstance(entry, str) else tuple(entry)
+                ndata = math.prod(mesh.shape[a] for a in flat)
+        if ndata > 1:
+            per = num_instances // ndata
+            self._shard_of = [i // per for i in range(num_instances)]
+        else:
+            self._shard_of = [0] * num_instances
+        self.num_data_shards = max(ndata, 1)
+
+    def data_shard_of(self, instance: int) -> int:
+        """Which data-parallel device group serves this instance's row."""
+        return self._shard_of[instance]
 
     # -- queue side ---------------------------------------------------------
 
@@ -105,8 +144,8 @@ class FIFOScheduler(Scheduler):
 class RoundRobinScheduler(Scheduler):
     name = "round-robin"
 
-    def __init__(self, num_instances: int):
-        super().__init__(num_instances)
+    def __init__(self, num_instances: int, mesh=None, rules=None):
+        super().__init__(num_instances, mesh=mesh, rules=rules)
         self._cursor = 0
 
     def select(self, free: Mapping[int, int]) -> list[Request]:
@@ -134,16 +173,24 @@ class TokenBudgetScheduler(Scheduler):
     note_generated); each admission round repeatedly picks the pending
     instance with the smallest served count, charging its head request's
     prompt immediately so a burst of long prompts on one instance yields
-    to the others."""
+    to the others.  Under a mesh, served-token ties break toward the
+    instance on the least-loaded data shard (device group), then by
+    index — without a mesh both extra keys are constant and the policy
+    is exactly the single-device one."""
 
     name = "token-budget"
 
-    def __init__(self, num_instances: int):
-        super().__init__(num_instances)
+    def __init__(self, num_instances: int, mesh=None, rules=None):
+        super().__init__(num_instances, mesh=mesh, rules=rules)
         self.served = [0] * num_instances
 
     def note_generated(self, instance: int, n: int) -> None:
         self.served[instance] += n
+
+    def _shard_load(self, shard: int) -> int:
+        return sum(
+            s for i, s in enumerate(self.served) if self._shard_of[i] == shard
+        )
 
     def select(self, free: Mapping[int, int]) -> list[Request]:
         budget = dict(free)
@@ -154,7 +201,12 @@ class TokenBudgetScheduler(Scheduler):
             ]
             if not ready:
                 return out
-            i = min(ready, key=lambda j: (self.served[j], j))
+            i = min(
+                ready,
+                key=lambda j: (
+                    self.served[j], self._shard_load(self._shard_of[j]), j
+                ),
+            )
             req = self.queues[i].popleft()
             # charge the prompt now so the NEXT pick sees the updated share
             self.served[i] += len(req.prompt)
@@ -167,7 +219,8 @@ POLICIES = {
 }
 
 
-def make_scheduler(policy: str, num_instances: int) -> Scheduler:
+def make_scheduler(policy: str, num_instances: int, mesh=None,
+                   rules=None) -> Scheduler:
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
-    return POLICIES[policy](num_instances)
+    return POLICIES[policy](num_instances, mesh=mesh, rules=rules)
