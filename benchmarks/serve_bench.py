@@ -77,6 +77,12 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-context", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size (tokens per admission call)")
+    ap.add_argument("--chunk-budget", type=int, default=4,
+                    help="max prefill chunk calls interleaved per engine step")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="concurrent prefill lanes (requests mid-admission)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host-platform devices and serve sharded")
@@ -113,13 +119,18 @@ def main():
     fused_server = MultiModelServer(
         cfg, merged, slots_per_instance=args.slots,
         max_context=max_context, temperature=0.0, mesh=mesh,
+        prefill_chunk=args.chunk, chunk_budget=args.chunk_budget,
+        prefill_lanes=args.lanes,
     )
 
     def fused_run():
         steps0 = fused_server.steps
+        stall0 = fused_server.metrics.admission_stall_s
         d = _drain(fused_server, [Request(r.instance, list(r.prompt), r.max_new_tokens)
                                   for r in reqs])
         d["decode_steps"] = fused_server.steps - steps0
+        d["admission_stall_ms"] = 1e3 * (
+            fused_server.metrics.admission_stall_s - stall0)
         return d
 
     fused_run()                      # compile warmup
@@ -166,6 +177,12 @@ def main():
         "mesh": dict(mesh.shape) if mesh is not None else None,
         "devices": num_devices,
         "merge_ms": merge_ms,
+        # compile-count trajectory: the chunked runtime's invariant is
+        # two shapes (chunk + tail) per family regardless of workload
+        "chunk_size": fused_server.prefill.chunk,
+        "chunk_budget": fused_server.chunk_budget,
+        "prefill_lanes": fused_server.prefill.lanes,
+        "compiled_shapes": fused_server.prefill.compiled_shapes,
         "fused": fused,
         "sequential": seq,
         # only a measured figure when actually serving sharded

@@ -92,6 +92,47 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
     return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
 
 
+# ---------------------------------------------------------------------------
+# chunked prefill (chainable cache-carry protocol — DESIGN.md §6.2)
+# ---------------------------------------------------------------------------
+
+
+def prefill_prefix_len(cfg: ModelConfig) -> int:
+    """Learned-prefix positions that precede the prompt tokens in the
+    prefill position stream (hybrid meta tokens, vlm image patches)."""
+    if cfg.family == "hybrid":
+        return hybrid.NUM_META_TOKENS
+    if cfg.family == "vlm":
+        return cfg.num_image_patches
+    return 0
+
+
+def init_chunk_carry(cfg: ModelConfig, m: int, b: int, cache_len: int):
+    """Fresh chunk-prefill carry: {"cache": <the family's decode
+    cache/state tree>} plus family extras (moe adds per-layer expert
+    counts).  The cache leaf shapes match ``make_cache`` at the same
+    ``cache_len``, so the serving slot scatter consumes carries
+    unchanged."""
+    return family_module(cfg).init_chunk_carry(cfg, m, b, cache_len)
+
+
+def chunk_carry_axes(cfg: ModelConfig):
+    """Logical-axes tree matching :func:`init_chunk_carry`'s structure."""
+    return family_module(cfg).chunk_carry_axes(cfg)
+
+
+def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
+    """Process one prompt chunk, threading the carry.
+
+    batch["tokens"] is (M,B,C) at absolute positions offset..offset+C-1
+    (offset: (M,B) int32; positions below ``prefill_prefix_len`` take
+    the family's prefix embeddings and ignore the token ids).  vlm/audio
+    additionally read batch["image_embeds"]/batch["frames"]; moe reads
+    batch["moe_limit"].  Returns the advanced carry — every family, any
+    prompt length, two compiled shapes total (C=chunk and C=1)."""
+    return family_module(cfg).prefill_chunk(cfg, params, batch, carry, offset)
+
+
 def make_cache(cfg: ModelConfig, m: int, b: int, context_len: int):
     fam = cfg.family
     if fam in ("dense", "vlm"):

@@ -4,8 +4,8 @@ Trains nothing — initializes (or restores) M fine-tuned instances,
 merges them (the paper's offline merge step, timed), and serves batched
 requests from per-instance queues through the fused decode.  Every
 servable family works (dense / moe / vlm / audio / ssm / hybrid);
-admission policy, sampling and prefill bucketing are flags.  Per-instance
-throughput/latency/queue metrics are reported at the end.
+admission policy, sampling and the prefill chunk/budget are flags.
+Per-instance throughput/latency/queue metrics are reported at the end.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \\
       --smoke --num-instances 4 --requests 32 --policy token-budget
@@ -47,6 +47,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-context", type=int, default=128)
     ap.add_argument("--policy", choices=sorted(POLICIES), default="fifo")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size (tokens per admission call)")
+    ap.add_argument("--chunk-budget", type=int, default=4,
+                    help="max prefill chunk calls interleaved per engine step")
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="concurrent prefill lanes (requests mid-admission)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -89,7 +95,8 @@ def main():
     server = MultiModelServer(
         cfg, merged, slots_per_instance=args.slots, max_context=max_context,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
-        scheduler=args.policy, mesh=mesh,
+        scheduler=args.policy, prefill_chunk=args.chunk,
+        prefill_lanes=args.lanes, chunk_budget=args.chunk_budget, mesh=mesh,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -102,6 +109,9 @@ def main():
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s, {server.steps} fused decode steps, "
           f"policy={args.policy})")
+    print(f"chunked prefill: chunk={server.prefill.chunk}, "
+          f"{server.prefill.compiled_shapes} compiled shapes (chunk + tail), "
+          f"{1e3 * server.metrics.admission_stall_s:.1f} ms admission stall")
     print(server.metrics.format_table())
     for r in results[:4]:
         print(f"  req {r.request_id} (instance {r.instance}): {r.tokens[:8]}...")

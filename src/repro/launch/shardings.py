@@ -64,7 +64,7 @@ def serve_rules(mesh) -> Rules:
 def default_serve_rules(mesh, rules: Rules | None = None) -> Rules | None:
     """Resolve the serving layer's ``mesh=``/``rules=`` pair: no mesh ->
     no rules (plain single-device path); a mesh without explicit rules
-    -> :func:`serve_rules`.  Shared by the engine and BucketedPrefill so
+    -> :func:`serve_rules`.  Shared by the engine and ChunkedPrefill so
     their defaults can't drift."""
     if mesh is None:
         return None

@@ -281,6 +281,74 @@ def decode_step(cfg, params, cache, tokens, pos):
                     "cross_v": cache["cross_v"]}
 
 
+def init_chunk_carry(cfg, m, b, cache_len):
+    return {"cache": make_cache(cfg, m, b, cache_len)}
+
+
+def chunk_carry_axes(cfg):
+    return {"cache": cache_axes(cfg)}
+
+
+def prefill_chunk(cfg, params, batch, carry, offset):
+    """One decoder chunk of a state-carrying prefill.
+
+    The encoder runs on batch["frames"] every chunk and the (identical)
+    cross-attention K/V are rewritten into the carry — recomputation
+    keeps the runtime at exactly two compiled shapes (chunk + tail)
+    instead of adding a third init-time shape; frames are short relative
+    to decode work, and serving feeds stub (zero) frames anyway."""
+    from repro.models.common import constrain_axes
+
+    tokens, frames = batch["tokens"], batch["frames"]
+    cache = carry["cache"]
+    m, b, c = tokens.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(cfg, params, frames)
+    fr = enc_out.shape[2]
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)   # (M,B,C)
+    x = L.embed(tokens, params["embed"], dt)
+    # learned positions gathered at each lane's absolute offsets
+    pidx = jnp.clip(positions, 0, params["pos_embed"].shape[1] - 1)
+    pe = jax.vmap(lambda t, i: jnp.take(t, i, axis=0))(
+        params["pos_embed"], pidx.reshape(m, b * c)
+    ).reshape(m, b, c, -1)
+    x = x + pe.astype(x.dtype)
+    s_cache = cache["self"].k.shape[3]
+    before = L.cache_positions_after(offset - 1, s_cache, 0)
+    kv_pos_self = jnp.concatenate([before, positions], axis=-1)
+    kv_pos_x = jnp.broadcast_to(jnp.arange(fr, dtype=jnp.int32), (m, b, fr))
+    kv_ax = ("instances", "batch", "cache_seq", "kv_heads", "kv_hd")
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        n = L.layer_norm(xc, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        q = L.linear(n, lp["wq"], lp.get("bq")).reshape(m, b, c, h, hd)
+        k = L.linear(n, lp["wk"]).reshape(m, b, c, kvh, hd)
+        v = L.linear(n, lp["wv"], lp.get("bv")).reshape(m, b, c, kvh, hd)
+        o = L.flash_attention(
+            q,
+            jnp.concatenate([ck, k.astype(ck.dtype)], axis=2),
+            jnp.concatenate([cv, v.astype(cv.dtype)], axis=2),
+            positions, kv_pos_self, causal=True,
+        )
+        xc = xc + L.linear(o.reshape(m, b, c, h * hd), lp["wo"], lp.get("bo"))
+        n = L.layer_norm(xc, lp["ln_x_s"], lp["ln_x_b"], cfg.norm_eps)
+        xq = L.linear(n, lp["x_wq"], lp.get("x_bq")).reshape(m, b, c, h, hd)
+        xk = L.linear(enc_out, lp["x_wk"]).reshape(m, b, fr, kvh, hd)
+        xv = L.linear(enc_out, lp["x_wv"], lp.get("x_bv")).reshape(m, b, fr, kvh, hd)
+        o = L.flash_attention(xq, xk, xv, positions, kv_pos_x, causal=False)
+        xc = xc + L.linear(o.reshape(m, b, c, h * hd), lp["x_wo"], lp.get("x_bo"))
+        n = L.layer_norm(xc, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        xc = xc + L.gelu_mlp(n, lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        nk = constrain_axes(L.cache_append_chunk(ck, k, positions, 0), kv_ax)
+        nv = constrain_axes(L.cache_append_chunk(cv, v, positions, 0), kv_ax)
+        return xc, (nk, nv, xk.astype(dt), xv.astype(dt))
+
+    _, (nk, nv, xks, xvs) = lax.scan(body, x, (params["dec_layers"], cache["self"].k, cache["self"].v))
+    return {"cache": {"self": KVCache(k=nk, v=nv), "cross_k": xks, "cross_v": xvs}}
+
+
 def make_cache(cfg, m, b, context_len, num_frames=None):
     fr = num_frames or cfg.num_audio_frames
     dt = jnp.dtype(cfg.dtype)

@@ -191,6 +191,45 @@ def constrain_tree(tree, axes_tree):
 
 
 # ---------------------------------------------------------------------------
+# chunk-carry protocol (serving chunked prefill)
+# ---------------------------------------------------------------------------
+#
+# Every family exposes a chainable, state-carrying chunk prefill (see
+# DESIGN.md §6.2):
+#
+#   init_chunk_carry(cfg, m, b, cache_len) -> carry
+#   chunk_carry_axes(cfg)                  -> logical-axes tree for carry
+#   prefill_chunk(cfg, params, batch, carry, offset) -> carry
+#
+# ``carry`` is a dict holding "cache" (EXACTLY the family's decode
+# cache/state tree, so slot surgery consumes it unchanged) plus any
+# family extras (moe keeps per-layer expert-usage counts).  ``offset``
+# is the (M, B) absolute position of the chunk's first token — families
+# with a learned prefix (hybrid meta tokens, vlm image patches) count
+# prefix positions in the same stream, substituting prefix embeddings
+# for positions below the prefix length.  The helpers below let the
+# serving runtime keep K independent requests ("lanes") in ONE carry
+# tree: a (K,) mask selects which lanes actually advance each call.
+
+
+def tree_select_lanes(mask, new_tree, old_tree, axes_tree):
+    """Per-lane merge of two carry trees: lane k (along each leaf's
+    ``instances`` dim) takes ``new_tree`` where ``mask[k]``, else keeps
+    ``old_tree``.  Used by the chunked prefill so one compiled chunk fn
+    serves lanes at different prompt offsets — finished/idle lanes ride
+    through unchanged."""
+    mask = jnp.asarray(mask)
+
+    def _sel(ax, n, o):
+        i = ax.index("instances")
+        mk = mask.reshape((mask.shape[0],) + (1,) * (n.ndim - i - 1))
+        return jnp.where(mk, n, o)
+
+    return jax.tree.map(_sel, axes_tree, new_tree, old_tree,
+                        is_leaf=_is_axes_tuple)
+
+
+# ---------------------------------------------------------------------------
 # misc
 # ---------------------------------------------------------------------------
 

@@ -188,6 +188,72 @@ def prefill(cfg: ModelConfig, params, tokens, *, cache_len: int | None = None):
     return logits, KVCache(k=ck, v=cv)
 
 
+def init_chunk_carry(cfg: ModelConfig, m: int, b: int, cache_len: int):
+    return {"cache": make_cache(cfg, m, b, cache_len)}
+
+
+def chunk_carry_axes(cfg: ModelConfig):
+    return {"cache": cache_axes(cfg)}
+
+
+def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
+    """One chunk of a state-carrying prefill (serving admission).
+
+    batch["tokens"]: (M,B,C) tokens at absolute positions
+    offset..offset+C-1 (offset (M,B) int32, may differ per instance
+    row).  The carry's KV cache holds every earlier position; the chunk
+    attends over [cache-so-far, chunk] and appends its k/v at the ring
+    slots, so any prompt length runs through the same two compiled
+    shapes (chunk + tail)."""
+    x = _embed_in(cfg, params, batch["tokens"])
+    return _prefill_chunk_embeds(cfg, params, x, carry, offset)
+
+
+def _prefill_chunk_embeds(cfg: ModelConfig, params, x, carry, offset):
+    """Chunk body on precomputed input embeddings (shared with vlm)."""
+    from repro.models.common import constrain_axes
+
+    cache = carry["cache"]
+    m, b, c, _ = x.shape
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)   # (M,B,C)
+    window = cfg.sliding_window
+    s_cache = cache.k.shape[3]
+    # the cache as it stood BEFORE this chunk: ring slots labeled with
+    # their absolute positions (-1 = not yet written); chunk keys ride
+    # along with their own positions, so one positional mask covers
+    # causality + sliding window + ring validity mid-prompt
+    before = L.cache_positions_after(offset - 1, s_cache, 0)
+    kv_pos = jnp.concatenate([before, positions], axis=-1)
+    kv_ax = ("instances", "batch", "cache_seq", "kv_heads", "kv_hd")
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        n = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q = L.linear(n, lp["wq"], lp.get("bq")).reshape(m, b, c, cfg.num_heads, cfg.head_dim)
+        k = L.linear(n, lp["wk"], lp.get("bk")).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
+        v = L.linear(n, lp["wv"], lp.get("bv")).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = L.flash_attention(
+            q,
+            jnp.concatenate([ck, k.astype(ck.dtype)], axis=2),
+            jnp.concatenate([cv, v.astype(cv.dtype)], axis=2),
+            positions, kv_pos, window=window,
+        )
+        xc = xc + L.linear(o.reshape(m, b, c, -1), lp["wo"], lp.get("bo"))
+        nn = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        xc = xc + L.swiglu_mlp(nn, lp["w_gate"], lp["w_up"], lp["w_down"])
+        # pin the appended cache to its logical layout inside the scan
+        # body — without the constraint GSPMD re-derives the kv sharding
+        # per iteration and can fall back to full rematerialization
+        nk = constrain_axes(L.cache_append_chunk(ck, k, positions, 0), kv_ax)
+        nv = constrain_axes(L.cache_append_chunk(cv, v, positions, 0), kv_ax)
+        return xc, (nk, nv)
+
+    _, (nk, nv) = lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    return {"cache": KVCache(k=nk, v=nv)}
+
+
 def decode_step(cfg: ModelConfig, params, cache: KVCache, tokens, pos):
     """One decode step. tokens (M,B,1); pos (M,B) = index of this token.
     Returns (logits (M,B,V), updated cache)."""

@@ -523,6 +523,96 @@ def prefill(cfg, params, tokens):
     }
 
 
+def init_chunk_carry(cfg, m, b, cache_len):
+    return {"cache": make_cache(cfg, m, b, cache_len)}
+
+
+def chunk_carry_axes(cfg):
+    return {"cache": cache_axes(cfg)}
+
+
+def prefill_chunk(cfg, params, batch, carry, offset):
+    """One chunk of a state-carrying Hymba prefill — the mid-prompt
+    chaining of the meta-token + SWA-ring caches that exact-length
+    prefill couldn't do (old serving limitation).
+
+    Positions [0, R) are the meta tokens (their embeddings come from
+    ``params["meta_tokens"]``, the chunk's token ids there are ignored);
+    prompt tokens follow at R+i.  Per decode group, chunk queries attend
+    over [group cache before this chunk, chunk k/v] with one positional
+    mask (causality + per-group window + ring validity + meta sink), so
+    a ring slot overwritten by this chunk is still visible to exactly
+    the chunk queries that precede the overwriting position.  Mamba
+    states thread through ``mamba_branch(state=...)`` as in decode."""
+    from repro.models.common import constrain_axes
+
+    tokens = batch["tokens"]
+    cache = carry["cache"]
+    m, b, c = tokens.shape
+    r = NUM_META_TOKENS
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)   # (M,B,C)
+    tok_x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
+    midx = jnp.clip(positions, 0, r - 1)
+    meta_x = jax.vmap(lambda t, i: jnp.take(t, i, axis=0))(
+        params["meta_tokens"], midx.reshape(m, b * c)
+    ).reshape(m, b, c, -1).astype(tok_x.dtype)
+    x = jnp.where((positions < r)[..., None], meta_x, tok_x)
+    w = swa_window(cfg)
+    kv_ax = ("instances", "batch", "cache_seq", "kv_heads", "kv_hd")
+    new_kv, new_ssm = [], {k: [] for k in cache["ssm"]}
+
+    for gi, (i0, i1, is_global) in enumerate(decode_groups(cfg)):
+        lp_g = jax.tree.map(lambda t: t[i0:i1], params["layers"])
+        ssm_g = jax.tree.map(lambda t: t[i0:i1], cache["ssm"])
+        kv_g = cache["kv"][gi]
+        s_cache = kv_g.k.shape[3]
+        pin = 0 if is_global else r
+        win = GLOBAL_WINDOW if is_global else w
+        before = L.cache_positions_after(offset - 1, s_cache, pin)
+        kv_pos = jnp.concatenate([before, positions], axis=-1)
+
+        def body(xc, xs, win=win, pin=pin, kv_pos=kv_pos):
+            lp, ck, cv, sh, sconv = xs
+            xn = L.rms_norm(xc, lp["norm"], cfg.norm_eps)
+            q = L.linear(xn, lp["wq"]).reshape(m, b, c, cfg.num_heads, cfg.head_dim)
+            kk = L.linear(xn, lp["wk"]).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
+            vv = L.linear(xn, lp["wv"]).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
+            q = L.rope(q, positions, cfg.rope_theta)
+            kk = L.rope(kk, positions, cfg.rope_theta)
+            o = L.flash_attention(
+                q,
+                jnp.concatenate([ck, kk.astype(ck.dtype)], axis=2),
+                jnp.concatenate([cv, vv.astype(cv.dtype)], axis=2),
+                positions, kv_pos, window=win, sink=r,
+            )
+            attn_out = L.linear(o.reshape(m, b, c, -1), lp["wo"])
+            ssm_out, nssm = mamba_branch(
+                cfg, lp, xn, state={"h": sh, "conv": sconv}
+            )
+            fused = 0.5 * (
+                _norm_branch(attn_out, lp["attn_out_norm"], cfg.norm_eps)
+                + _norm_branch(ssm_out, lp["ssm_out_norm"], cfg.norm_eps)
+            )
+            xc = xc + fused
+            n = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+            xc = xc + L.swiglu_mlp(n, lp["w_gate"], lp["w_up"], lp["w_down"])
+            nk = constrain_axes(L.cache_append_chunk(ck, kk, positions, pin), kv_ax)
+            nv = constrain_axes(L.cache_append_chunk(cv, vv, positions, pin), kv_ax)
+            return xc, (nk, nv, nssm["h"], nssm["conv"])
+
+        x, (nk, nv, nh, nconv) = lax.scan(
+            body, x, (lp_g, kv_g.k, kv_g.v, ssm_g["h"], ssm_g["conv"])
+        )
+        new_kv.append(KVCache(k=nk, v=nv))
+        new_ssm["h"].append(nh)
+        new_ssm["conv"].append(nconv)
+
+    return {"cache": {
+        "kv": new_kv,
+        "ssm": {k: jnp.concatenate(v, axis=0) for k, v in new_ssm.items()},
+    }}
+
+
 def cache_abstract(cfg, m, b, context_len):
     """ShapeDtypeStruct cache (for the dry-run input specs)."""
     real = make_cache.__wrapped__ if hasattr(make_cache, "__wrapped__") else None

@@ -315,6 +315,63 @@ def cache_slot_positions(pos: jax.Array, s_cache: int) -> jax.Array:
     return jnp.where(p >= 0, p, -1)
 
 
+def cache_positions_after(last_pos: jax.Array, s_cache: int, pin: int = 0) -> jax.Array:
+    """Slot -> absolute-position map after writing every position up to
+    ``last_pos`` (inclusive; -1 = nothing written yet), for a cache whose
+    first ``pin`` slots are pinned (slot j holds position j forever —
+    Hymba meta tokens) and whose remaining ``s_cache - pin`` slots ring
+    over positions >= pin (``pin=0`` is the plain ring/full layout of
+    :func:`cache_slot_positions`).
+
+    last_pos: (M,B) int32 -> (M,B,S_cache) int32, -1 marking empty slots.
+    This is the *mid-prompt* generalization of ``cache_slot_positions``:
+    the chunked prefill uses it to label the cache as it stood BEFORE the
+    chunk being processed (``last_pos = offset - 1``), including while
+    the pinned prefix itself is still being filled.
+    """
+    slots = jnp.arange(s_cache, dtype=jnp.int32)
+    last = last_pos[..., None]
+    w = s_cache - pin
+    pinned = jnp.where(slots <= last, slots, -1)
+    if w <= 0:
+        return pinned
+    q = last - pin                                   # ring-relative last
+    cur = q % w                                      # garbage when q < 0 (masked)
+    base = q - cur
+    i = slots - pin
+    p = jnp.where(i <= cur, base + i, base - w + i) + pin
+    ring = jnp.where((q >= 0) & (p >= pin), p, -1)
+    return jnp.where(slots < pin, pinned, ring)
+
+
+def cache_append_chunk(
+    cache_layer: jax.Array, new: jax.Array, positions: jax.Array, pin: int = 0
+) -> jax.Array:
+    """Write a chunk of k/v rows into their cache slots.
+
+    cache_layer: (M,B,S,KVH,hd); new: (M,B,C,KVH,hd); positions: (M,B,C)
+    absolute positions.  Slot rule matches :func:`cache_positions_after`:
+    position p lands at slot p when p < pin, else pin + (p - pin) % W.
+    Positions inside one chunk must map to distinct slots (the serving
+    runtime clamps the chunk size to the ring width), so the scatter has
+    no duplicate indices.
+    """
+    m, b, s, kvh, hd = cache_layer.shape
+    c = new.shape[2]
+    w = max(s - pin, 1)
+    slots = jnp.where(positions < pin, positions, pin + (positions - pin) % w)
+
+    def upd(cl, x, sl):
+        return cl.at[sl].set(x)
+
+    out = jax.vmap(upd)(
+        cache_layer.reshape(m * b, s, kvh, hd),
+        new.astype(cache_layer.dtype).reshape(m * b, c, kvh, hd),
+        slots.reshape(m * b, c).astype(jnp.int32),
+    )
+    return out.reshape(m, b, s, kvh, hd)
+
+
 def cache_update_one(
     cache_k_layer: jax.Array,
     cache_v_layer: jax.Array,

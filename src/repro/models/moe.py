@@ -98,17 +98,30 @@ def capacity(cfg: ModelConfig, s: int) -> int:
     return max(1, math.ceil(s * cfg.num_experts_per_tok / cfg.num_experts * cfg.capacity_factor))
 
 
-def _row_dispatch(x_row, e_sorted, order, cap, num_experts):
+def _row_dispatch(x_row, e_sorted, order, cap, num_experts, counts=None, limit=None):
     """Per-(m,b) row: build the (E*C, D) dispatch buffer.
 
-    x_row: (S, D); e_sorted: (S*K,) expert id per sorted assignment;
-    order: (S*K,) argsort permutation. Returns (buffer (E*C, D), dest,
-    keep, tok_sorted)."""
+    x_row: (S, D); e_sorted: (S*K,) expert id per sorted assignment
+    (``num_experts`` is the sentinel id for masked-out assignments —
+    they sort last and are never kept); order: (S*K,) argsort
+    permutation.  ``counts`` ((E,) int32 per-expert assignments already
+    made by EARLIER chunks of the same request) and ``limit`` (scalar
+    int32 capacity derived from the request's real token count) switch
+    the keep rule to the chainable chunked form: an assignment survives
+    iff its GLOBAL position-in-expert (carry + local) is below the
+    request's exact-length capacity, so chunked prefill routes
+    identically to one exact-length pass.  Returns (buffer (E*C, D),
+    dest, keep, tok_sorted)."""
     sk = e_sorted.shape[0]
     k = sk // x_row.shape[0]
     starts = jnp.searchsorted(e_sorted, jnp.arange(num_experts, dtype=e_sorted.dtype))
-    pos = jnp.arange(sk, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
-    keep = pos < cap
+    pos = jnp.arange(sk, dtype=jnp.int32) - starts[
+        jnp.minimum(e_sorted, num_experts - 1)
+    ].astype(jnp.int32)
+    keep = (e_sorted < num_experts) & (pos < cap)
+    if counts is not None:
+        gpos = counts[jnp.minimum(e_sorted, num_experts - 1)].astype(jnp.int32) + pos
+        keep = keep & (gpos < limit)
     dest = jnp.where(keep, e_sorted.astype(jnp.int32) * cap + pos, num_experts * cap)
     tok_sorted = (order // k).astype(jnp.int32)
     buf = jnp.zeros((num_experts * cap, x_row.shape[1]), x_row.dtype)
@@ -244,11 +257,29 @@ def _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s):
     )(x, e_sorted, order, w_sorted, lp["we_gate"], lp["we_up"], lp["we_down"])
 
 
-def moe_mlp(cfg: ModelConfig, lp, x):
-    """x: (M,B,S,D) -> (M,B,S,D), aux load-balance loss (scalar, f32)."""
+def moe_mlp(cfg: ModelConfig, lp, x, *, valid=None, counts=None, limit=None):
+    """x: (M,B,S,D) -> (M,B,S,D), aux load-balance loss (scalar, f32).
+
+    Chainable/masked routing (serving chunked prefill — DESIGN.md §6.2):
+
+    * ``valid`` (M,B,S) bool masks padded/junk tokens out of routing
+      entirely (their assignments take a sentinel expert id, sort last,
+      never occupy capacity and combine to zero),
+    * ``counts`` (M,B,E) int32 carries per-expert assignment counts from
+      earlier chunks of the same request and ``limit`` (M,B) int32 is
+      the exact-length capacity computed from the request's REAL token
+      count — together they make the keep/drop decisions of a chunked
+      prefill identical to one exact-length pass (position-in-expert is
+      global, capacity comes from unpadded lengths).
+
+    Returns (out, aux) — plus the updated counts as a third element when
+    ``counts`` is given."""
     m, b, s, d = x.shape
     e, k = cfg.num_experts, cfg.num_experts_per_tok
-    cap = capacity(cfg, s)
+    chunked = counts is not None
+    # chunk-local buffers never drop (S*K rows bound any expert's share);
+    # all dropping is decided by the global counts+limit rule above
+    cap = s * k if chunked else capacity(cfg, s)
 
     # §Perf (EXPERIMENTS.md qwen3-moe iteration 1): the sort-based dispatch
     # below is data-dependent gather/scatter along the token axis.  GSPMD
@@ -269,6 +300,14 @@ def moe_mlp(cfg: ModelConfig, lp, x):
 
     e_flat = top_e.reshape(m, b, s * k)
     w_flat = top_w.reshape(m, b, s * k)
+    if valid is not None:
+        v_flat = jnp.broadcast_to(valid[..., None], (m, b, s, k)).reshape(m, b, s * k)
+        e_flat = jnp.where(v_flat, e_flat, e)      # sentinel: sorts last, never kept
+    new_counts = None
+    if chunked:
+        # every (non-masked) assignment advances its expert's global
+        # position, kept or dropped — matching the exact-length rule
+        new_counts = counts + jax.nn.one_hot(e_flat, e, dtype=jnp.int32).sum(axis=2)
     order = jnp.argsort(e_flat, axis=-1).astype(jnp.int32)
     e_sorted = constrain(
         jnp.take_along_axis(e_flat, order, axis=-1), "instances", "batch", None
@@ -286,6 +325,12 @@ def moe_mlp(cfg: ModelConfig, lp, x):
     #             dispatch + local einsums + token-space psum (wire per
     #             layer = token bytes; see _moe_mlp_ep_shmap).
     placement = rules.mapping.get("experts_compute") if rules is not None else None
+    if placement == "ep" and (chunked or valid is not None):
+        raise NotImplementedError(
+            "masked/chainable MoE routing (serving chunked prefill) is not "
+            "implemented for the experts_compute='ep' shard_map variant; "
+            "serve under serve_rules (experts_compute='model') instead"
+        )
     if placement == "ep":
         out = _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s)
         out = constrain(out, "instances", "batch", "seq", "act_embed")
@@ -296,15 +341,24 @@ def moe_mlp(cfg: ModelConfig, lp, x):
         aux = (e * (frac / k * pmean).sum(-1)).mean()
         return out, aux
 
-    disp = jax.vmap(jax.vmap(lambda xr, es, od: _row_dispatch(xr, es, od, cap, e)))
     row2 = ("instances", "batch", None)
     row3 = ("instances", "batch", None, None)
+    if chunked:
+        disp = jax.vmap(jax.vmap(
+            lambda xr, es, od, ct, lm: _row_dispatch(xr, es, od, cap, e, ct, lm)
+        ))
+        d_args = (x, e_sorted, order, counts, limit)
+        d_logical = (row3, row2, row2, row2, ("instances", "batch"))
+    else:
+        disp = jax.vmap(jax.vmap(lambda xr, es, od: _row_dispatch(xr, es, od, cap, e)))
+        d_args = (x, e_sorted, order)
+        d_logical = (row3, row2, row2)
     if rules is None:
-        buf, dest, keep, tok_sorted = disp(x, e_sorted, order)
+        buf, dest, keep, tok_sorted = disp(*d_args)
     else:
         buf, dest, keep, tok_sorted = _shmap_rows(
-            disp, rules, (x, e_sorted, order),
-            in_logical=(row3, row2, row2),
+            disp, rules, d_args,
+            in_logical=d_logical,
             out_logical=(row3, row2, row2, row2),
         )
     buf = buf.reshape(m, b, e, cap, d)
@@ -336,6 +390,8 @@ def moe_mlp(cfg: ModelConfig, lp, x):
     )                                                          # (M,E) assignment frac * k
     pmean = probs.mean(axis=(1, 2))                            # (M,E)
     aux = (e * (frac / k * pmean).sum(-1)).mean()
+    if chunked:
+        return out, aux, new_counts
     return out, aux
 
 
@@ -444,3 +500,67 @@ def make_cache(cfg, m, b, context_len):
 def cache_axes(cfg):
     ax = ("layers", "instances", "batch", "cache_seq", "kv_heads", "kv_hd")
     return KVCache(k=ax, v=ax)
+
+
+def init_chunk_carry(cfg: ModelConfig, m: int, b: int, cache_len: int):
+    return {
+        "cache": make_cache(cfg, m, b, cache_len),
+        # per-layer, per-expert assignment counts from earlier chunks:
+        # routers are independent per layer, so the chainable capacity
+        # rule needs one usage row per layer
+        "counts": jnp.zeros((cfg.num_layers, m, b, cfg.num_experts), jnp.int32),
+    }
+
+
+def chunk_carry_axes(cfg: ModelConfig):
+    return {
+        "cache": cache_axes(cfg),
+        "counts": ("layers", "instances", "batch", None),
+    }
+
+
+def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
+    """Chunked prefill with exact-length-equivalent expert routing.
+
+    batch["moe_limit"]: (M,B) int32 — the capacity an exact-length
+    prefill of this request's REAL token count would use; combined with
+    the carried per-layer expert counts, chunked routing keeps/drops
+    exactly the tokens the exact pass would (closes the bucketed-prefill
+    capacity caveat)."""
+    from repro.models.common import constrain_axes
+
+    tokens, limit = batch["tokens"], batch["moe_limit"]
+    cache, counts = carry["cache"], carry["counts"]
+    m, b, c = tokens.shape
+    x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)
+    window = cfg.sliding_window
+    s_cache = cache.k.shape[3]
+    before = L.cache_positions_after(offset - 1, s_cache, 0)
+    kv_pos = jnp.concatenate([before, positions], axis=-1)
+    kv_ax = ("instances", "batch", "cache_seq", "kv_heads", "kv_hd")
+
+    def body(xc, xs):
+        lp, ck, cv, cnt = xs
+        n = L.rms_norm(xc, lp["attn_norm"], cfg.norm_eps)
+        q = L.linear(n, lp["wq"], lp.get("bq")).reshape(m, b, c, cfg.num_heads, cfg.head_dim)
+        kk = L.linear(n, lp["wk"], lp.get("bk")).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
+        vv = L.linear(n, lp["wv"], lp.get("bv")).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
+        q = L.rope(q, positions, cfg.rope_theta)
+        kk = L.rope(kk, positions, cfg.rope_theta)
+        o = L.flash_attention(
+            q,
+            jnp.concatenate([ck, kk.astype(ck.dtype)], axis=2),
+            jnp.concatenate([cv, vv.astype(cv.dtype)], axis=2),
+            positions, kv_pos, window=window,
+        )
+        xc = xc + L.linear(o.reshape(m, b, c, -1), lp["wo"], lp.get("bo"))
+        n = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
+        y, _, new_cnt = moe_mlp(cfg, lp, n, counts=cnt, limit=limit)
+        xc = xc + y
+        nk = constrain_axes(L.cache_append_chunk(ck, kk, positions, 0), kv_ax)
+        nv = constrain_axes(L.cache_append_chunk(cv, vv, positions, 0), kv_ax)
+        return xc, (nk, nv, new_cnt)
+
+    _, (nk, nv, ncnt) = lax.scan(body, x, (params["layers"], cache.k, cache.v, counts))
+    return {"cache": KVCache(k=nk, v=nv), "counts": ncnt}

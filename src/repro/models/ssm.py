@@ -535,6 +535,24 @@ def make_state(cfg, m, b):
     return st
 
 
+def init_chunk_carry(cfg, m, b, cache_len):
+    return {"cache": make_state(cfg, m, b)}
+
+
+def chunk_carry_axes(cfg):
+    return {"cache": state_axes(cfg)}
+
+
+def prefill_chunk(cfg, params, batch, carry, offset):
+    """One chunk of a state-carrying prefill.  The recurrent state is
+    positionless, so ``offset`` is unused — chaining is pure state
+    threading (this was already exact pre-refactor; the chunk-carry
+    protocol just gives it the uniform serving signature)."""
+    x = L.embed(batch["tokens"], params["embed"], jnp.dtype(cfg.dtype))
+    _, states = _trunk(cfg, params, x, states=carry["cache"])
+    return {"cache": states}
+
+
 def take_state(cfg, state, m, b):
     """Slice slot (m, b) out of an (M, B) recurrent-state grid, keeping
     singleton dims — the recurrent-family counterpart of KV-cache slot

@@ -115,6 +115,26 @@ def prefill(cfg, params, tokens, image_embeds, *, cache_len: int | None = None):
     return logits, L.KVCache(k=ck, v=cv)
 
 
+def prefill_chunk(cfg, params, batch, carry, offset):
+    """Chunked prefill: image-patch positions [0, P) and text positions
+    [P, ...) ride one position stream.  For positions below P the input
+    embedding is the projected patch embedding at that position (the
+    token id is ignored); past P it is the token embedding — so mixed
+    prompt lengths share the dense chunk body's two compiled shapes."""
+    tokens, image_embeds = batch["tokens"], batch["image_embeds"]
+    m, b, c = tokens.shape
+    p = image_embeds.shape[2]
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)   # (M,B,C)
+    tok_x = dense._embed_in(cfg, params, tokens)
+    img = project_image(cfg, params, image_embeds)                   # (M,B,P,D)
+    idx = jnp.clip(positions, 0, p - 1)[..., None]
+    img_x = jnp.take_along_axis(img, jnp.broadcast_to(idx, idx.shape[:3] + (img.shape[-1],)), axis=2)
+    x = jnp.where((positions < p)[..., None], img_x.astype(tok_x.dtype), tok_x)
+    return dense._prefill_chunk_embeds(cfg, params, x, carry, offset)
+
+
 decode_step = dense.decode_step
 make_cache = dense.make_cache
 cache_axes = dense.cache_axes
+init_chunk_carry = dense.init_chunk_carry
+chunk_carry_axes = dense.chunk_carry_axes

@@ -1,6 +1,6 @@
 from repro.serving.engine import MultiModelServer, SERVABLE_FAMILIES
 from repro.serving.metrics import ServerMetrics
-from repro.serving.prefill import BucketedPrefill, PrefillOut
+from repro.serving.prefill import ChunkedPrefill, PrefillOut
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import (
     POLICIES,

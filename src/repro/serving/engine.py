@@ -7,10 +7,13 @@ of per-slot decode state and composes four subsystems:
 * ``scheduler.py`` — policy-driven admission (fifo / round-robin /
   token-budget fairness) over per-instance request queues (different
   tasks have different input streams — paper §2.1),
-* ``prefill.py`` — length-bucketed, batched admission: k admitted
-  requests are prefilled in one fused call per length bucket (each
-  request rides the instances axis via an on-device weight-row gather),
-  instead of one compile + one call per prompt length,
+* ``prefill.py`` — the unified chunked-prefill runtime: every prompt
+  (any family, any length) streams through the family's chainable
+  ``api.prefill_chunk`` in fixed-size chunks — two compiled shapes per
+  family total — with up to ``prefill_lanes`` requests sharing one
+  carry tree via an on-device weight-row gather.  The engine grants the
+  runtime a per-step ``chunk_budget``, so prefill work interleaves with
+  decode steps instead of stalling the grid while a long prompt admits,
 * ``sampling.py`` — greedy/temperature/top-k sampling over the whole
   (M, B) logits grid, fused into the SAME jitted program as the decode
   step: an engine step is exactly ONE device call, with zero per-slot
@@ -18,7 +21,7 @@ of per-slot decode state and composes four subsystems:
 * ``metrics.py`` — per-instance throughput/latency/queue counters.
 
 Mesh-parametric execution: pass ``mesh=`` (and optionally ``rules=``) to
-run the WHOLE serving path — slot surgery, bucketed prefill, the fused
+run the WHOLE serving path — slot surgery, chunked prefill, the fused
 decode+sample step, metrics — under an explicit ``jax.sharding.Mesh``
 with the instances/batch axes data-parallel and heads/cache_seq tensor-
 parallel (the logical-axis rules in ``launch/shardings.py``).  Params
@@ -50,7 +53,7 @@ from repro import api
 from repro.launch.compat import mesh_context
 from repro.models import common as C
 from repro.serving.metrics import ServerMetrics
-from repro.serving.prefill import BucketedPrefill
+from repro.serving.prefill import ChunkedPrefill
 from repro.serving.sampling import make_grid_sampler
 from repro.serving.scheduler import Request, Result, Scheduler, make_scheduler
 
@@ -72,8 +75,9 @@ class MultiModelServer:
         top_k: int = 0,
         seed: int = 0,
         scheduler: str | Scheduler = "fifo",
-        prefill_buckets: tuple[int, ...] | None = None,
-        recurrent_chunk: int = 16,
+        prefill_chunk: int = 32,
+        prefill_lanes: int = 4,
+        chunk_budget: int = 4,
         mesh=None,
         rules=None,
     ):
@@ -100,11 +104,12 @@ class MultiModelServer:
             if isinstance(scheduler, str) else scheduler
         )
         self.metrics = ServerMetrics(self.m, mesh=mesh)
-        self.prefill = BucketedPrefill(
-            cfg, max_context=max_context, buckets=prefill_buckets,
-            recurrent_chunk=recurrent_chunk, metrics=self.metrics,
+        self.prefill = ChunkedPrefill(
+            cfg, max_context=max_context, chunk=prefill_chunk,
+            lanes=prefill_lanes, metrics=self.metrics,
             mesh=mesh, rules=self.rules,
         )
+        self.chunk_budget = max(1, chunk_budget)
 
         self.params = params
         self.cache = api.make_cache(cfg, self.m, self.b, max_context)
@@ -129,6 +134,11 @@ class MultiModelServer:
         self.pos = np.zeros((self.m, self.b), np.int32)
         self.cur_tok = np.zeros((self.m, self.b), np.int32)
         self.slot_busy = np.zeros((self.m, self.b), bool)
+        # reserved for a request still prefilling: busy (not admittable)
+        # but not yet decoding — the fused grid step treats it as an
+        # idle lane until the chunk runtime delivers its cache rows
+        self.slot_prefilling = np.zeros((self.m, self.b), bool)
+        self._reserved: dict[int, tuple[int, int]] = {}   # request_id -> slot
         self.active: list[list[Request | None]] = [
             [None] * self.b for _ in range(self.m)
         ]
@@ -173,10 +183,14 @@ class MultiModelServer:
     def submit(self, req: Request) -> int:
         if not req.prompt:
             raise ValueError("empty prompt")
+        # chunked prefill is length-agnostic: anything whose positions
+        # (learned prefix + prompt) fit the serving context is accepted;
+        # past that the cache physically cannot hold the prompt
         if len(req.prompt) > self.prefill.max_prompt_len():
             raise ValueError(
                 f"prompt of {len(req.prompt)} tokens exceeds the serving "
-                f"limit {self.prefill.max_prompt_len()}"
+                f"context: at most {self.prefill.max_prompt_len()} prompt "
+                f"tokens fit max_context={self.max_context}"
             )
         req.request_id = self._req_counter
         self._req_counter += 1
@@ -186,37 +200,57 @@ class MultiModelServer:
         return req.request_id
 
     def _admit(self):
+        """Move pending requests into prefill lanes, reserving a grid
+        slot for each (the slot starts decoding once its chunks land)."""
+        lanes = self.prefill.free_lanes()
         free = {
             i: int(self.b - self.slot_busy[i].sum()) for i in range(self.m)
         }
-        if not any(free.values()) or self.scheduler.total_pending() == 0:
+        if lanes == 0 or not any(free.values()) \
+                or self.scheduler.total_pending() == 0:
             return
-        admits = self.scheduler.select(free)
-        if not admits:
-            return
-        free_slots = {
-            i: [b for b in range(self.b) if not self.slot_busy[i, b]]
-            for i in range(self.m)
-        }
-        outs = self.prefill.run(self.params, admits)
-        for req, out in zip(admits, outs):
-            m, b = req.instance, free_slots[req.instance].pop(0)
+        admits = self.scheduler.select(free, limit=lanes)
+        for req in admits:
+            m = req.instance
+            b = next(bb for bb in range(self.b) if not self.slot_busy[m, bb])
+            self.slot_busy[m, b] = True
+            self.slot_prefilling[m, b] = True
+            self._reserved[req.request_id] = (m, b)
+            self.active[m][b] = req
+            self.prefill.start(req)
+            self.metrics.note_admit(m, len(req.prompt))
+
+    def _finish_prefills(self, completed) -> None:
+        """Scatter completed prefill lanes into their reserved slots and
+        flip them to decoding."""
+        for req, out in completed:
+            m, b = self._reserved.pop(req.request_id)
             with self._ctx():
                 self.cache = self._scatter(self.cache, out.cache, out.index, m, b)
             self.pos[m, b] = out.pos
             self.cur_tok[m, b] = out.last_token
-            self.slot_busy[m, b] = True
-            self.active[m][b] = req
+            self.slot_prefilling[m, b] = False
             self.generated[req.request_id] = []
-            self.metrics.note_admit(m, len(req.prompt))
 
     # -- engine step ----------------------------------------------------------
 
     def step(self) -> list[Result]:
-        """Admit pending requests, run ONE fused decode+sample over the
-        whole (M, B) grid, collect finished slots."""
+        """Admit pending requests into prefill lanes, advance prefill by
+        at most ``chunk_budget`` device calls, run ONE fused
+        decode+sample over the whole (M, B) grid, collect finished
+        slots.  Prefilling slots ride the grid as idle lanes, so long
+        prompts admit without stalling decode."""
         self._admit()
-        if not self.slot_busy.any():
+        if self.prefill.in_flight():
+            t0 = time.perf_counter()
+            completed = self.prefill.advance(self.params, self.chunk_budget)
+            stall = time.perf_counter() - t0
+            # decode-ready slots sat idle for this long while admission
+            # chunks ran — the quantity the chunk budget bounds
+            if (self.slot_busy & ~self.slot_prefilling).any():
+                self.metrics.note_admission_stall(stall)
+            self._finish_prefills(completed)
+        if not (self.slot_busy & ~self.slot_prefilling).any():
             return []
         if self.mesh is not None:
             # one host->device transfer straight to the grid sharding
@@ -235,7 +269,7 @@ class MultiModelServer:
         done: list[Result] = []
         for m in range(self.m):
             for b in range(self.b):
-                if not self.slot_busy[m, b]:
+                if not self.slot_busy[m, b] or self.slot_prefilling[m, b]:
                     continue
                 req = self.active[m][b]
                 tok = int(nxt[m, b])
@@ -268,6 +302,7 @@ class MultiModelServer:
         out: list[Result] = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if not self.slot_busy.any() and self.scheduler.total_pending() == 0:
+            if (not self.slot_busy.any() and self.prefill.in_flight() == 0
+                    and self.scheduler.total_pending() == 0):
                 return out
         raise RuntimeError("serving did not drain")

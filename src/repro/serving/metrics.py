@@ -37,8 +37,11 @@ class ServerMetrics:
         self.clock = clock
         self.per_instance = [InstanceStats() for _ in range(num_instances)]
         self.decode_steps = 0        # fused (M, B)-grid decode+sample calls
-        self.prefill_batches = 0     # bucketed prefill device calls
-        self.prefill_requests = 0    # requests admitted through them
+        self.prefill_batches = 0     # chunk/tail prefill device calls
+        self.prefill_requests = 0    # lane-steps served by them
+        # wall time decode-ready slots sat idle while admission chunks
+        # ran — what the engine's chunk_budget bounds per step
+        self.admission_stall_s = 0.0
         self.started = clock()
         # mesh-parametric serving: record the grid's mesh geometry so
         # snapshots carry per-device throughput (serve_bench JSON)
@@ -65,6 +68,9 @@ class ServerMetrics:
 
     def note_decode_step(self) -> None:
         self.decode_steps += 1
+
+    def note_admission_stall(self, seconds: float) -> None:
+        self.admission_stall_s += seconds
 
     def note_token(self, instance: int, *, first: bool, submit_time: float) -> None:
         st = self.per_instance[instance]
@@ -103,6 +109,7 @@ class ServerMetrics:
             "decode_steps": self.decode_steps,
             "prefill_batches": self.prefill_batches,
             "prefill_requests": self.prefill_requests,
+            "admission_stall_ms": 1e3 * self.admission_stall_s,
             "generated_tokens": gen,
             "tok_per_s": gen / dt,
             "instances": inst,
@@ -133,7 +140,8 @@ class ServerMetrics:
         rows.append(
             f"total: {snap['generated_tokens']} tokens in {snap['wall_s']:.2f}s "
             f"({snap['tok_per_s']:.1f} tok/s) — {snap['decode_steps']} fused decode "
-            f"steps, {snap['prefill_batches']} prefill batches "
-            f"({snap['prefill_requests']} requests)"
+            f"steps, {snap['prefill_batches']} prefill chunk calls "
+            f"({snap['prefill_requests']} lane-steps), "
+            f"{snap['admission_stall_ms']:.1f} ms admission stall"
         )
         return "\n".join(rows)

@@ -1,32 +1,35 @@
-"""Length-bucketed, batched prefill for serving admission.
+"""Unified chunked prefill for serving admission — one length-agnostic
+path for EVERY family, interleavable with decode.
 
-The old engine jitted ``api.prefill`` at the exact prompt shape — every
-new prompt length triggered a fresh XLA compile, and k admitted requests
-cost k device calls.  Admission here is compiled per *bucket*:
+The old admission layer was three divergent paths (padded length-bucket
+batches for KV families, a state-carrying chunk loop for ssm, exact
+per-prompt-length compiles for hybrid) with a documented MoE capacity
+caveat.  This runtime replaces all of them: every prompt — dense, moe,
+vlm, audio, ssm AND hybrid — streams through the family's chainable
+``api.prefill_chunk`` (DESIGN.md §6.2) in fixed-size chunks, so
 
-* prompts are right-padded to the next length bucket (defaults are
-  powers of two clipped to the cache length), and up to a power-of-two
-  batch of requests is prefilled in ONE fused call — each request rides
-  the *instances* axis of the merged program via an on-device gather of
-  its model's weight rows (``gather_instances``), so requests targeting
-  different fine-tuned models still share the batch,
-* padded junk positions are harmless for KV-cache families: the grid
-  decode masks cache slots beyond the current position (see
-  DESIGN.md §6), and the engine re-decodes the last prompt token so no
-  logits need to be extracted at per-request offsets,
-* recurrent-state families can't absorb padded junk (state integrates
-  every step), so exactness is kept a different way: ssm prompts are
-  processed in fixed-size chunks through a state-carrying prefill (one
-  compile for the chunk, one for the single-token tail) and hybrid
-  prompts fall back to exact-length per-request prefill (documented
-  limitation: Hymba's meta-token attention + SWA ring make mid-prompt
-  cache chaining family-specific work).
+* admission compiles exactly TWO shapes per family — the chunk and the
+  single-token tail — regardless of how many distinct prompt lengths
+  arrive (``compiled_shapes`` asserts this in tests),
+* up to ``lanes`` requests prefill together in ONE carry tree, each
+  riding the instances axis of the merged program via an on-device
+  weight-row gather (``gather_instances``); per-lane traced offsets let
+  lanes sit at different prompt depths inside the same compiled call,
+* progress is incremental: the engine grants a per-step chunk *budget*,
+  so a 4k prompt no longer stalls the decode grid — partially-prefilled
+  lanes coexist with decoding slots (true continuous batching),
+* exactness is positional, not padded: chunk queries attend over
+  [cache-so-far, chunk] with ring/meta/window validity encoded in one
+  kv-position mask, recurrent state threads through the carry, and moe
+  routing carries per-expert counts + real-length capacities so chunked
+  routing equals the exact-length pass.
 
-MoE caveat: expert capacity is computed over the padded token count, so
-a bucketed moe prefill may route marginal tokens differently from an
-exact-length prefill.  Greedy serving output equality is only guaranteed
-for dense/vlm (and tested there); moe serving is validated as a smoke
-path.
+Lane lifecycle: ``start`` binds a request to a free lane; each jitted
+call takes (valid, fresh) lane masks — ``fresh`` re-initializes a
+lane's carry rows in-graph (no extra compiled shape for resets),
+``valid`` gates which lanes actually advance.  Completed lanes are
+handed to the engine as :class:`PrefillOut` rows of the shared carry
+tree and scattered into their grid slots.
 """
 from __future__ import annotations
 
@@ -40,17 +43,15 @@ import jax.numpy as jnp
 
 from repro import api
 from repro.launch.compat import mesh_context
+from repro.models import common as C
 from repro.models.common import constrain_tree, gather_instances
+from repro.serving.scheduler import Request
 
-DEFAULT_BUCKETS = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
 KV_FAMILIES = ("dense", "moe", "vlm", "audio")
+SERVABLE = KV_FAMILIES + ("ssm", "hybrid")
 
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+DEFAULT_CHUNK = 32
+DEFAULT_LANES = 4
 
 
 @dataclasses.dataclass
@@ -58,213 +59,259 @@ class PrefillOut:
     """One admitted request's prefill product.
 
     ``cache`` is a cache/state tree whose instances axis holds this
-    request at row ``index`` (batched KV prefills share one tree across
-    the group; recurrent prefills are per-request with index 0).  The
-    engine scatters row ``index`` into the request's grid slot, then
-    seeds decode at ``pos`` with ``last_token`` — the last prompt token
-    is (re)decoded by the first fused grid step, so sampling stays fully
-    on-device and prefill never extracts per-request logits."""
+    request at row ``index`` (all completed lanes of one advance() share
+    the same tree).  The engine scatters row ``index`` into the
+    request's grid slot, then seeds decode at ``pos`` with
+    ``last_token`` — the last prompt token is (re)decoded by the first
+    fused grid step, so sampling stays fully on-device and prefill never
+    extracts per-request logits."""
     cache: Any
     index: int
     pos: int
     last_token: int
 
 
-class BucketedPrefill:
+@dataclasses.dataclass
+class _Lane:
+    req: Request | None = None
+    next_pos: int = 0          # next absolute position to process
+    total: int = 0             # positions to prefill = prefix + len(prompt) - 1
+    fresh: bool = False        # carry rows need re-init before first work
+
+
+class ChunkedPrefill:
     def __init__(
         self,
         cfg,
         *,
         max_context: int,
-        buckets: tuple[int, ...] | None = None,
-        recurrent_chunk: int = 16,
+        chunk: int = DEFAULT_CHUNK,
+        lanes: int = DEFAULT_LANES,
         metrics=None,
         mesh=None,
         rules=None,
     ):
-        if cfg.family not in KV_FAMILIES + ("ssm", "hybrid"):
+        if cfg.family not in SERVABLE:
             raise ValueError(f"family {cfg.family!r} is not servable")
         self.cfg = cfg
         self.family = cfg.family
         self.max_context = max_context
         self.metrics = metrics
-        self.chunk = max(1, recurrent_chunk)
+        self.lanes = max(1, lanes)
+        # a chunk must map to distinct cache slots, so clamp it to the
+        # narrowest ring the family keeps (hybrid SWA ring / sliding
+        # window); full-context caches don't wrap during prefill
+        ring = self._min_ring_width()
+        self.chunk = max(1, min(chunk, ring if ring else chunk))
+        self.prefix = api.prefill_prefix_len(cfg)
+        if self.max_prompt_len() <= 0:
+            raise ValueError(
+                f"max_context={max_context} leaves no room for prompt "
+                f"tokens after the {self.prefix}-position learned prefix"
+            )
         self._axes = api.axes(cfg)
-        # mesh-parametric admission: every prefill jit traces under the
-        # mesh + rules context (model-zoo constrain calls engage) and the
-        # produced cache/state tree is pinned to the rules' layout, so
-        # the engine's slot scatter consumes already-sharded trees
+        self._carry_axes = api.chunk_carry_axes(cfg)
         from repro.launch.shardings import default_serve_rules
         self.mesh = mesh
         self.rules = default_serve_rules(mesh, rules)
-        self._cache_axes = api.cache_axes(cfg)
-        # KV prefill caches are built directly at the grid's cache length
-        # so slot scatter is a pure dynamic-update (no reshaping)
-        self.cache_len = (
-            (cfg.sliding_window or max_context) if cfg.family in KV_FAMILIES
-            else max_context
-        )
-        prefix = cfg.num_image_patches if cfg.family == "vlm" else 0
-        cap = self.cache_len - prefix
-        assert cap > 0, (self.cache_len, prefix)
-        base = buckets if buckets is not None else DEFAULT_BUCKETS
-        self.buckets = tuple(sorted({min(b, cap) for b in base} | {cap}))
-        self._fns: dict = {}          # (family-specific key) -> jitted fn
-        self._zero_state = None
+        with mesh_context(self.mesh, self.rules):
+            self._carry = api.init_chunk_carry(cfg, self.lanes, 1, max_context)
+        if mesh is not None:
+            from repro.launch.shardings import tree_shardings
+            self._carry = jax.device_put(
+                self._carry,
+                tree_shardings(self.rules, self._carry_axes, self._carry),
+            )
+        # pristine carry for zero-work completions (single-token prompts
+        # of prefix-less families scatter fresh init state, no device call)
+        self._zero_carry = self._carry
+        self._lanes = [_Lane() for _ in range(self.lanes)]
+        self._fns: dict[int, Any] = {}      # chunk width -> jitted step
+        self._static = self._static_inputs()
+        self._tail_turn = False             # chunk/tail round alternation
 
-    # -- public --------------------------------------------------------------
+    # -- geometry ------------------------------------------------------------
+
+    def _min_ring_width(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            from repro.models import hybrid as H
+            # the ACTUAL ring width of the SWA group cache: make_cache
+            # clips the cache to max_context, so a context below
+            # meta+window leaves a narrower ring than the window itself
+            s_cache = min(H.NUM_META_TOKENS + H.swa_window(cfg), self.max_context)
+            return max(s_cache - H.NUM_META_TOKENS, 1)
+        if cfg.family in ("dense", "moe", "vlm") and cfg.sliding_window:
+            return cfg.sliding_window
+        return 0
 
     def max_prompt_len(self) -> int:
-        """Longest admissible prompt (tokens)."""
-        if self.family == "hybrid":
-            from repro.models import hybrid as H
-            return self.max_context - H.NUM_META_TOKENS
-        if self.family == "ssm":
-            return self.max_context
-        return self.buckets[-1]
+        """Longest admissible prompt: every position (learned prefix +
+        prompt tokens) must fit the serving context."""
+        return self.max_context - self.prefix
 
     @property
     def compiled_shapes(self) -> int:
+        """Distinct compiled prefill shapes — at most 2 (chunk + tail)."""
         return len(self._fns)
 
-    def run(self, params, reqs) -> list[PrefillOut]:
-        """Prefill the admitted requests; one PrefillOut per request, in
-        the same order."""
+    # -- lane bookkeeping ----------------------------------------------------
+
+    def free_lanes(self) -> int:
+        return sum(1 for l in self._lanes if l.req is None)
+
+    def in_flight(self) -> int:
+        return sum(1 for l in self._lanes if l.req is not None)
+
+    def start(self, req: Request) -> None:
+        """Bind a request to a free lane (its chunks run on subsequent
+        ``advance`` calls)."""
+        for lane in self._lanes:
+            if lane.req is None:
+                lane.req = req
+                lane.next_pos = 0
+                lane.total = self.prefix + len(req.prompt) - 1
+                lane.fresh = True
+                return
+        raise RuntimeError("no free prefill lane")
+
+    # -- static per-call inputs ----------------------------------------------
+
+    def _static_inputs(self) -> dict:
+        cfg, k = self.cfg, self.lanes
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.family == "vlm":
+            return {"image_embeds": jnp.zeros(
+                (k, 1, cfg.num_image_patches, cfg.vision_embed_dim), dt)}
+        if cfg.family == "audio":
+            return {"frames": jnp.zeros(
+                (k, 1, cfg.num_audio_frames, cfg.d_model), dt)}
+        return {}
+
+    def _fn(self, c: int):
+        if c not in self._fns:
+            cfg = self.cfg
+
+            def fn(params, idx, tokens, carry, offset, valid, fresh, extras):
+                sub = gather_instances(params, self._axes, idx)
+                init = api.init_chunk_carry(cfg, self.lanes, 1, self.max_context)
+                carry = C.tree_select_lanes(fresh, init, carry, self._carry_axes)
+                batch = {"tokens": tokens, **self._static, **extras}
+                new = api.prefill_chunk(cfg, sub, batch, carry, offset)
+                new = C.tree_select_lanes(valid, new, carry, self._carry_axes)
+                return constrain_tree(new, self._carry_axes)
+
+            self._fns[c] = jax.jit(fn)
+        return self._fns[c]
+
+    # -- the chunk pump ------------------------------------------------------
+
+    def advance(self, params, budget: int) -> list[tuple[Request, PrefillOut]]:
+        """Run up to ``budget`` chunk/tail device calls; return the
+        requests whose prefill completed (with their PrefillOut rows of
+        the shared carry tree, to be scattered before the next advance)."""
+        done: list[tuple[Request, PrefillOut]] = []
+        # zero-work lanes (single-token prompts of prefix-less families)
+        # complete immediately from the pristine init carry — their grid
+        # slot needs fresh state, never a device call
+        zero_done: list[tuple[Request, PrefillOut]] = []
+        for i, lane in enumerate(self._lanes):
+            if lane.req is not None and lane.total == 0:
+                zero_done.append((lane.req, PrefillOut(
+                    cache=self._zero_carry["cache"], index=i, pos=0,
+                    last_token=lane.req.prompt[-1],
+                )))
+                lane.req = None
+        stepped = False
         with mesh_context(self.mesh, self.rules):
-            if self.family == "ssm":
-                return [self._run_ssm(params, r) for r in reqs]
-            if self.family == "hybrid":
-                return [self._run_hybrid(params, r) for r in reqs]
-            return self._run_kv(params, reqs)
+            while budget > 0:
+                busy = [i for i, l in enumerate(self._lanes) if l.req is not None]
+                if not busy:
+                    break
+                chunkable = [i for i in busy
+                             if self._lanes[i].total - self._lanes[i].next_pos >= self.chunk]
+                tailable = [i for i in busy
+                            if 0 < self._lanes[i].total - self._lanes[i].next_pos < self.chunk]
+                if not chunkable and not tailable:
+                    break
+                # alternate chunk and tail rounds when both kinds of work
+                # exist: under continuous long-prompt arrivals a lane one
+                # token from completion must not be starved behind lanes
+                # that always have a full chunk left
+                run_tail = bool(tailable) and (self._tail_turn or not chunkable)
+                self._tail_turn = not run_tail
+                workable = tailable if run_tail else chunkable
+                c = 1 if run_tail else self.chunk
+                self._step(params, workable, c)
+                stepped = True
+                budget -= 1
+                for i in busy:
+                    lane = self._lanes[i]
+                    if lane.req is not None and lane.next_pos >= lane.total:
+                        done.append((lane.req, PrefillOut(
+                            cache=None, index=i, pos=lane.total,
+                            last_token=lane.req.prompt[-1],
+                        )))
+                        lane.req = None
+        if stepped:
+            # settle the async dispatch so the engine's admission-stall
+            # timer measures device execution, not just dispatch (the
+            # scatter/decode it times against depend on this carry anyway)
+            jax.block_until_ready(self._carry)
+        for _, out in done:
+            out.cache = self._carry["cache"]
+        return zero_done + done
 
-    # -- KV-cache families: padded bucket batches ----------------------------
-
-    def _bucket(self, n: int) -> int:
-        for s in self.buckets:
-            if s >= n:
-                return s
-        raise ValueError(
-            f"prompt of {n} tokens exceeds the largest bucket "
-            f"{self.buckets[-1]} (max_context={self.max_context})"
-        )
-
-    def _run_kv(self, params, reqs) -> list[PrefillOut]:
-        outs: list[PrefillOut | None] = [None] * len(reqs)
-        groups: dict[int, list[int]] = {}
-        for i, r in enumerate(reqs):
-            groups.setdefault(self._bucket(len(r.prompt)), []).append(i)
-        prefix = self.cfg.num_image_patches if self.family == "vlm" else 0
-        for s_b, idxs in sorted(groups.items()):
-            kb = _next_pow2(len(idxs))
-            toks = np.zeros((kb, 1, s_b), np.int32)
-            inst = np.zeros((kb,), np.int32)
-            for row, i in enumerate(idxs):
-                p = reqs[i].prompt
-                toks[row, 0, : len(p)] = p
-                inst[row] = reqs[i].instance
-            cache = self._kv_fn(s_b, kb)(params, jnp.asarray(inst), jnp.asarray(toks))
-            if self.metrics is not None:
-                self.metrics.note_prefill_batch(len(idxs))
-            for row, i in enumerate(idxs):
-                r = reqs[i]
-                outs[i] = PrefillOut(
-                    cache=cache, index=row,
-                    pos=prefix + len(r.prompt) - 1, last_token=r.prompt[-1],
-                )
-        return outs  # type: ignore[return-value]
-
-    def _kv_fn(self, s_b: int, kb: int):
-        key = ("kv", s_b, kb)
-        if key not in self._fns:
-            cfg = self.cfg
-
-            def fn(params, idx, tokens):
-                sub = gather_instances(params, self._axes, idx)
-                batch = {"tokens": tokens}
-                if cfg.family == "vlm":
-                    batch["image_embeds"] = jnp.zeros(
-                        (kb, 1, cfg.num_image_patches, cfg.vision_embed_dim),
-                        jnp.dtype(cfg.dtype),
-                    )
-                elif cfg.family == "audio":
-                    batch["frames"] = jnp.zeros(
-                        (kb, 1, cfg.num_audio_frames, cfg.d_model),
-                        jnp.dtype(cfg.dtype),
-                    )
-                _, cache = api.prefill(cfg, sub, batch, cache_len=self.cache_len)
-                return constrain_tree(cache, self._cache_axes)
-
-            self._fns[key] = jax.jit(fn)
-        return self._fns[key]
-
-    # -- ssm: exact chunked state-carrying prefill ---------------------------
-
-    def _zero(self):
-        if self._zero_state is None:
-            from repro.models import ssm
-            self._zero_state = ssm.make_state(self.cfg, 1, 1)
-        return self._zero_state
-
-    def _run_ssm(self, params, req) -> PrefillOut:
-        toks = np.asarray(req.prompt[:-1], np.int32)
-        idx = jnp.asarray([req.instance], jnp.int32)
-        state = self._zero()
-        i, c = 0, self.chunk
-        while i + c <= len(toks):
-            state = self._ssm_fn(c)(
-                params, idx, jnp.asarray(toks[i : i + c]).reshape(1, 1, c), state
-            )
-            i += c
-        for t in toks[i:]:
-            state = self._ssm_fn(1)(
-                params, idx, jnp.full((1, 1, 1), t, jnp.int32), state
-            )
-        if self.metrics is not None:
-            self.metrics.note_prefill_batch(1)
-        return PrefillOut(
-            cache=state, index=0, pos=len(req.prompt) - 1,
-            last_token=req.prompt[-1],
-        )
-
-    def _ssm_fn(self, c: int):
-        key = ("ssm", c)
-        if key not in self._fns:
-            cfg = self.cfg
-            from repro.models import ssm
-
-            def fn(params, idx, tokens, state):
-                sub = gather_instances(params, self._axes, idx)
-                _, st = ssm.prefill(cfg, sub, tokens, state=state)
-                return constrain_tree(st, self._cache_axes)
-
-            self._fns[key] = jax.jit(fn)
-        return self._fns[key]
-
-    # -- hybrid: exact-length per-request prefill ----------------------------
-
-    def _run_hybrid(self, params, req) -> PrefillOut:
-        from repro.models import hybrid as H
-        toks = np.asarray(req.prompt[:-1], np.int32).reshape(1, 1, -1)
-        cache = self._hybrid_fn(toks.shape[2])(
-            params, jnp.asarray([req.instance], jnp.int32), jnp.asarray(toks)
+    def _step(self, params, workable: list[int], c: int) -> None:
+        k = self.lanes
+        toks = np.zeros((k, 1, c), np.int32)
+        inst = np.zeros((k,), np.int32)
+        offset = np.zeros((k, 1), np.int32)
+        valid = np.zeros((k,), bool)
+        fresh = np.zeros((k,), bool)
+        for i, lane in enumerate(self._lanes):
+            if lane.req is None:
+                continue
+            inst[i] = lane.req.instance
+            offset[i, 0] = lane.next_pos
+            fresh[i] = lane.fresh
+            lane.fresh = False
+            if i in workable:
+                valid[i] = True
+                for j in range(c):
+                    p = lane.next_pos + j
+                    if p >= self.prefix:
+                        toks[i, 0, j] = lane.req.prompt[p - self.prefix]
+                lane.next_pos += c
+        extras = {}
+        if self.family == "moe":
+            from repro.models import moe
+            limit = np.zeros((k, 1), np.int32)
+            for i, lane in enumerate(self._lanes):
+                if lane.req is not None and lane.total > 0:
+                    limit[i, 0] = moe.capacity(self.cfg, lane.total)
+            extras["moe_limit"] = jnp.asarray(limit)
+        self._carry = self._fn(c)(
+            params, jnp.asarray(inst), jnp.asarray(toks), self._carry,
+            jnp.asarray(offset), jnp.asarray(valid), jnp.asarray(fresh), extras,
         )
         if self.metrics is not None:
-            self.metrics.note_prefill_batch(1)
-        return PrefillOut(
-            cache=cache, index=0,
-            pos=H.NUM_META_TOKENS + len(req.prompt) - 1,
-            last_token=req.prompt[-1],
-        )
+            self.metrics.note_prefill_batch(len(workable))
 
-    def _hybrid_fn(self, s: int):
-        key = ("hybrid", s)
-        if key not in self._fns:
-            cfg = self.cfg
+    # -- convenience (tests / non-interleaved callers) -----------------------
 
-            def fn(params, idx, tokens):
-                sub = gather_instances(params, self._axes, idx)
-                _, cache = api.prefill(cfg, sub, {"tokens": tokens})
-                return constrain_tree(cache, self._cache_axes)
-
-            self._fns[key] = jax.jit(fn)
-        return self._fns[key]
+    def run(self, params, reqs) -> list[PrefillOut]:
+        """Prefill the given requests to completion (no interleaving);
+        one PrefillOut per request, in submission order.  Requests are
+        fed through the lanes in waves of ``self.lanes``."""
+        outs: dict[int, PrefillOut] = {}
+        pending = list(enumerate(reqs))
+        started: dict[int, int] = {}      # id(req) -> original index
+        while pending or self.in_flight():
+            while pending and self.free_lanes():
+                i, r = pending.pop(0)
+                started[id(r)] = i
+                self.start(r)
+            for req, out in self.advance(params, budget=1_000_000):
+                outs[started[id(req)]] = out
+        return [outs[i] for i in range(len(reqs))]

@@ -115,30 +115,41 @@ class Scheduler:
 
     # -- policy -------------------------------------------------------------
 
-    def select(self, free: Mapping[int, int]) -> list[Request]:
+    def select(self, free: Mapping[int, int],
+               limit: int | None = None) -> list[Request]:
         """Pop and return the requests to admit this round.
 
         ``free`` maps instance -> number of free slots in its row.  The
         returned list is in admission order; never more than ``free[m]``
-        requests per instance."""
+        requests per instance, and never more than ``limit`` requests in
+        total (the engine passes its count of free prefill lanes, so
+        admission can't outrun the chunked-prefill runtime)."""
         raise NotImplementedError
 
 
 class FIFOScheduler(Scheduler):
     name = "fifo"
 
-    def select(self, free: Mapping[int, int]) -> list[Request]:
+    def select(self, free: Mapping[int, int],
+               limit: int | None = None) -> list[Request]:
         budget = dict(free)
-        heads = [q[0] for q in self.queues if q]
         out = []
-        for req in sorted(heads, key=lambda r: r._seq):
-            # admit in arrival order, draining each chosen queue as far as
-            # this round's slots allow
-            q = self.queues[req.instance]
-            while q and budget.get(req.instance, 0) > 0:
-                out.append(q.popleft())
-                budget[req.instance] -= 1
-        return sorted(out, key=lambda r: r._seq)
+        # strict global arrival order: repeatedly admit the OLDEST head
+        # whose instance still has slot budget — under a scarce lane
+        # limit this can't let a younger request on one instance jump an
+        # older head queued on another
+        while limit is None or len(out) < limit:
+            heads = [
+                q[0] for q in self.queues
+                if q and budget.get(q[0].instance, 0) > 0
+            ]
+            if not heads:
+                break
+            req = min(heads, key=lambda r: r._seq)
+            self.queues[req.instance].popleft()
+            budget[req.instance] -= 1
+            out.append(req)
+        return out
 
 
 class RoundRobinScheduler(Scheduler):
@@ -148,13 +159,20 @@ class RoundRobinScheduler(Scheduler):
         super().__init__(num_instances, mesh=mesh, rules=rules)
         self._cursor = 0
 
-    def select(self, free: Mapping[int, int]) -> list[Request]:
+    def select(self, free: Mapping[int, int],
+               limit: int | None = None) -> list[Request]:
         budget = dict(free)
         out = []
         progressed = True
         while progressed:
             progressed = False
             for off in range(self.m):
+                if limit is not None and len(out) >= limit:
+                    # resume the interrupted pass here next round, so a
+                    # scarce lane limit can't freeze the rotation on one
+                    # instance
+                    self._cursor = (self._cursor + off) % self.m
+                    return out
                 i = (self._cursor + off) % self.m
                 if self.queues[i] and budget.get(i, 0) > 0:
                     out.append(self.queues[i].popleft())
@@ -192,10 +210,13 @@ class TokenBudgetScheduler(Scheduler):
             s for i, s in enumerate(self.served) if self._shard_of[i] == shard
         )
 
-    def select(self, free: Mapping[int, int]) -> list[Request]:
+    def select(self, free: Mapping[int, int],
+               limit: int | None = None) -> list[Request]:
         budget = dict(free)
         out = []
         while True:
+            if limit is not None and len(out) >= limit:
+                return out
             ready = [
                 i for i in range(self.m) if self.queues[i] and budget.get(i, 0) > 0
             ]

@@ -1,5 +1,5 @@
 """Serving subsystem tests: scheduler policies, on-device sampling,
-bucketed prefill, slot surgery, and end-to-end continuous batching for
+chunked prefill, slot surgery, and end-to-end continuous batching for
 both KV-cache and recurrent-state families."""
 import numpy as np
 import pytest
@@ -11,7 +11,7 @@ from repro import api
 from repro.configs import registry
 from repro.models import common as C
 from repro.serving import MultiModelServer, Request, sample_tokens
-from repro.serving.prefill import BucketedPrefill
+from repro.serving.prefill import ChunkedPrefill
 from repro.serving.scheduler import (
     FIFOScheduler, RoundRobinScheduler, TokenBudgetScheduler,
 )
@@ -57,6 +57,18 @@ def test_round_robin_cycles_instances():
     # first pass takes one per non-empty instance before seconds
     assert [r.instance for r in got[:2]] == [0, 1]
     assert [r.instance for r in got[2:]] == [0, 0]
+
+
+def test_round_robin_lane_limit_does_not_freeze_rotation():
+    """A scarce admission limit (free prefill lanes) must not pin the
+    rotation: the interrupted pass resumes at the next instance."""
+    s = RoundRobinScheduler(2)
+    for i in range(2):
+        s.submit(_req(0, [i]))
+        s.submit(_req(1, [i]))
+    first = s.select({0: 2, 1: 2}, limit=1)
+    second = s.select({0: 2, 1: 2}, limit=1)
+    assert [r.instance for r in first + second] == [0, 1]
 
 
 def test_token_budget_prefers_underserved_instance():
@@ -124,25 +136,27 @@ def test_top_k_sampling_stays_in_top_k():
 
 
 # ---------------------------------------------------------------------------
-# bucketed prefill
+# chunked prefill
 # ---------------------------------------------------------------------------
 
 
-def test_bucketed_prefill_matches_per_request_prefill():
-    """Padded, batched, cross-instance prefill must write the same cache
-    prefix as an exact-length per-request prefill."""
+def test_chunked_prefill_matches_per_request_prefill():
+    """Chunked, lane-batched, cross-instance prefill must write the same
+    cache prefix as an exact-length per-request prefill (the chunked
+    runtime processes prompt[:-1]; the engine re-decodes the last prompt
+    token as its first fused grid step)."""
     cfg = registry.get_smoke_config("tinyllama-1.1b").with_(num_instances=3)
     params = api.init(cfg, jax.random.PRNGKey(0))
     max_context = 32
-    bp = BucketedPrefill(cfg, max_context=max_context, buckets=(8,))
+    cp = ChunkedPrefill(cfg, max_context=max_context, chunk=4, lanes=4)
     prompts = [(0, [5, 6, 7]), (2, [9, 8, 7, 6, 5, 4]), (1, [3])]
     reqs = [_req(i, p) for i, p in prompts]
-    outs = bp.run(params, reqs)
-    assert bp.compiled_shapes == 1      # one (bucket, k) shape for all three
+    outs = cp.run(params, reqs)
+    assert cp.compiled_shapes <= 2      # chunk + tail, for all three lengths
 
     ax = api.axes(cfg)
     for req, out in zip(reqs, outs):
-        l = len(req.prompt)
+        l = len(req.prompt) - 1         # chunked prefill stops before last token
         pi = C.take_instance(params, ax, req.instance)
         toks = jnp.asarray(req.prompt, jnp.int32)[None, None]
         _, exact = api.prefill(cfg, pi, {"tokens": toks}, cache_len=max_context)
@@ -153,18 +167,19 @@ def test_bucketed_prefill_matches_per_request_prefill():
                 np.asarray(e[:, 0, 0, :l], np.float32),
                 rtol=2e-5, atol=2e-5,
             )
-        assert out.pos == l - 1 and out.last_token == req.prompt[-1]
+        assert out.pos == len(req.prompt) - 1
+        assert out.last_token == req.prompt[-1]
 
 
-def test_prefill_compiles_bounded_by_buckets():
+def test_prefill_compiles_bounded_chunk_plus_tail():
     cfg = registry.get_smoke_config("tinyllama-1.1b").with_(num_instances=2)
     params = api.init(cfg, jax.random.PRNGKey(0))
-    bp = BucketedPrefill(cfg, max_context=64, buckets=(4, 16))
-    # 6 distinct prompt lengths, one admission round each -> at most
-    # len(buckets) x k-bucket shapes, not 6 compiles
-    for l in (1, 2, 3, 5, 9, 13):
-        bp.run(params, [_req(0, list(range(1, l + 1)))])
-    assert bp.compiled_shapes <= 3
+    cp = ChunkedPrefill(cfg, max_context=64, chunk=4, lanes=2)
+    # 7 distinct prompt lengths -> exactly two shapes (chunk + tail),
+    # never a per-length compile
+    for l in (1, 2, 3, 5, 9, 13, 21):
+        cp.run(params, [_req(0, list(range(1, l + 1)))])
+    assert cp.compiled_shapes <= 2
 
 
 # ---------------------------------------------------------------------------
@@ -229,7 +244,7 @@ def _drain_and_check(arch, max_context=48, oracle=True, **server_kw):
 def test_ssm_serving_end_to_end_matches_isolated_decode():
     """Recurrent-state slot surgery: fused xLSTM serving must equal each
     instance's isolated greedy decode (chunked prefill is exact)."""
-    _drain_and_check("xlstm-1.3b", recurrent_chunk=3)
+    _drain_and_check("xlstm-1.3b", prefill_chunk=3)
 
 
 @pytest.mark.slow

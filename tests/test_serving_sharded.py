@@ -5,7 +5,7 @@ The ISSUE-2 contract: ``MultiModelServer(mesh=...)`` produces the SAME
 greedy token streams on a 1-device mesh as today's single-device code
 (bit-for-bit — the mesh only adds trivial sharding annotations) and on a
 forced 8-CPU-device (data=2, model=4) mesh, where decode, sampling, slot
-surgery and bucketed prefill all actually run sharded.  Slot surgery
+surgery and chunked prefill all actually run sharded.  Slot surgery
 must preserve every cache leaf's NamedSharding across admissions.  The
 main test process keeps the spec-mandated single CPU device, so the
 multi-device checks run in a subprocess with
