@@ -1,20 +1,26 @@
-"""Serving benchmark: fused (M, B)-grid serving vs M sequential servers.
+"""Serving benchmark: fused (M, B)-grid serving vs M sequential servers,
+plus the tail-folding admission A/B.
 
 The paper's headline claim restated at the serving-system level: one
 NetFuse-merged `MultiModelServer` over M instances vs M single-model
 servers drained one after another (the paper's "sequential" strategy),
-same request set, same slot budget per instance.  Emits a JSON perf
-record on stdout (and optionally to a file) so perf deltas can be
-tracked across PRs.
+same request set, same slot budget per instance.  On top of that, the
+record carries a ``tail_folding`` section — the same fused workload
+served with the padded-final-chunk admission ON vs OFF — splitting
+throughput into prefill vs decode tokens/s and recording
+``device_calls_per_admission``, so the admission-latency trajectory is
+tracked from this record onward (``BENCH_serve.json``).
 
 Run: PYTHONPATH=src python benchmarks/serve_bench.py \
          [--arch tinyllama-1.1b] [--num-instances 4] [--requests 24] \
-         [--devices 8] [--mesh-shape 2x4] [--json-out serve_bench.json]
+         [--devices 8] [--mesh-shape 2x4] [--json-out BENCH_serve.json]
 
 ``--devices N`` forces N host-platform devices (consumed before the
 first jax init) and serves the fused grid under a mesh (``--mesh-shape
-DxT``, default all-data); the JSON record then carries the mesh shape
-and per-device throughput.
+DxT``, default all-data); the JSON record then carries the mesh shape,
+per-device throughput, and the tail-folding A/B on BOTH the no-mesh and
+the mesh path.  Every throughput field is validated finite before the
+record is written — a missing/NaN figure fails the run (CI bench-smoke).
 """
 from __future__ import annotations
 
@@ -39,11 +45,11 @@ from repro.models import common as C
 from repro.serving import MultiModelServer, Request
 
 
-def _mk_requests(rng, m, n, vocab, max_new):
+def _mk_requests(rng, m, n, vocab, max_new, pmin=3, pmax=12):
     return [
         Request(
             instance=i % m,
-            prompt=rng.integers(1, vocab, size=int(rng.integers(3, 12))).tolist(),
+            prompt=rng.integers(1, vocab, size=int(rng.integers(pmin, pmax))).tolist(),
             max_new_tokens=max_new,
         )
         for i in range(n)
@@ -66,6 +72,93 @@ def _drain(server, reqs) -> dict:
     }
 
 
+def _timed_pass(server, reqs) -> dict:
+    """Drain ``reqs`` and report the pass's own deltas: prefill vs decode
+    throughput split, admission device-call counts, stall."""
+    met = server.metrics
+    base = (met.prefill_wall_s, met.prefill_tokens, met.prefill_batches,
+            met.admitted, met.admission_stall_s, server.steps)
+    for r in reqs:
+        server.submit(r)
+    t0 = time.perf_counter()
+    results = server.run_until_drained()
+    wall = time.perf_counter() - t0
+    gen = sum(len(r.tokens) for r in results)
+    pw = met.prefill_wall_s - base[0]
+    ptok = met.prefill_tokens - base[1]
+    calls = met.prefill_batches - base[2]
+    admitted = met.admitted - base[3]
+    return {
+        "requests": len(results),
+        "tokens": gen,
+        "wall_s": wall,
+        "tok_per_s": gen / wall,
+        "prefill_tokens": ptok,
+        "prefill_wall_s": pw,
+        "prefill_tok_per_s": ptok / pw if pw > 0 else 0.0,
+        "decode_tok_per_s": gen / max(wall - pw, 1e-9),
+        "device_calls": calls,
+        "device_calls_per_admission": calls / max(admitted, 1),
+        "compiled_shapes": server.prefill.compiled_shapes,
+        "admission_stall_ms": 1e3 * (met.admission_stall_s - base[4]),
+        "decode_steps": server.steps - base[5],
+    }
+
+
+def _fold_ab(cfg, merged, mesh, args, reqs) -> dict:
+    """Tail-folding A/B on one mesh setting: the same workload served
+    with the padded-final-chunk admission OFF (chunk + per-token tails,
+    the pre-change baseline) then ON — fresh servers, compile warmup
+    excluded from the timed pass."""
+    out = {}
+    for key, fold in (("fold_off", False), ("fold_on", True)):
+        server = MultiModelServer(
+            cfg, merged, slots_per_instance=args.slots,
+            max_context=args.resolved_max_context, temperature=0.0, mesh=mesh,
+            prefill_chunk=args.chunk, chunk_budget=args.chunk_budget,
+            prefill_lanes=args.lanes, tail_fold=fold,
+        )
+        mk = lambda: [Request(r.instance, list(r.prompt), r.max_new_tokens)
+                      for r in reqs]
+        _timed_pass(server, mk())          # compile warmup
+        out[key] = _timed_pass(server, mk())
+    off, on = out["fold_off"], out["fold_on"]
+    out["prefill_speedup"] = (
+        on["prefill_tok_per_s"] / off["prefill_tok_per_s"]
+        if off["prefill_tok_per_s"] > 0 else None
+    )
+    out["device_call_reduction"] = (
+        off["device_calls"] / on["device_calls"] if on["device_calls"] else None
+    )
+    return out
+
+
+_THROUGHPUT_FIELDS = ("tok_per_s", "prefill_tok_per_s", "decode_tok_per_s",
+                      "device_calls_per_admission")
+
+
+def validate_record(record: dict) -> None:
+    """Fail on missing or non-finite throughput figures (CI bench-smoke
+    runs this on every record before it is written)."""
+    import math as _math
+
+    def check(variant: dict, where: str):
+        for f in _THROUGHPUT_FIELDS:
+            assert f in variant, f"{where}: missing {f}"
+            v = variant[f]
+            assert isinstance(v, (int, float)) and _math.isfinite(v), (
+                f"{where}: {f} is not finite: {v!r}")
+
+    for side in ("fused", "sequential"):
+        v = record[side]
+        assert _math.isfinite(v["tok_per_s"]), (side, v["tok_per_s"])
+    for mesh_key, ab in record["tail_folding"].items():
+        if ab is None:
+            continue
+        for key in ("fold_off", "fold_on"):
+            check(ab[key], f"tail_folding.{mesh_key}.{key}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b",
@@ -77,6 +170,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-context", type=int, default=128)
+    ap.add_argument("--prompt-min", type=int, default=3)
+    ap.add_argument("--prompt-max", type=int, default=12,
+                    help="prompt lengths ~ U[min, max); raise past --chunk "
+                         "to exercise multi-chunk admissions in the "
+                         "tail-folding A/B")
     ap.add_argument("--chunk", type=int, default=32,
                     help="prefill chunk size (tokens per admission call)")
     ap.add_argument("--chunk-budget", type=int, default=4,
@@ -99,6 +197,7 @@ def main():
     if base.family == "hybrid":
         from repro.models import hybrid as H
         max_context = max(max_context, H.min_serving_context(base, args.max_new))
+    args.resolved_max_context = max_context
     cfg1 = base.with_(num_instances=1)
     cfg = base.with_(num_instances=m)
 
@@ -110,7 +209,8 @@ def main():
     merge_ms = (time.perf_counter() - t0) * 1e3
 
     rng = np.random.default_rng(args.seed)
-    reqs = _mk_requests(rng, m, args.requests, cfg.vocab_size, args.max_new)
+    reqs = _mk_requests(rng, m, args.requests, cfg.vocab_size, args.max_new,
+                        args.prompt_min, args.prompt_max)
 
     # servers are created ONCE and drained twice (warmup compiles, then
     # the timed pass), so neither side pays compile time in the record —
@@ -165,6 +265,14 @@ def main():
     sequential_run()                 # compile warmup
     seq = sequential_run()
 
+    # tail-folding A/B: always on the no-mesh path; ALSO on the mesh
+    # path when serving sharded, so the record shows the admission
+    # improvement on both (acceptance: prefill tok/s fold_on > fold_off)
+    tail_folding = {"no_mesh": _fold_ab(cfg, merged, None, args, reqs)}
+    tail_folding["mesh"] = (
+        _fold_ab(cfg, merged, mesh, args, reqs) if mesh is not None else None
+    )
+
     num_devices = fused_server.metrics.num_devices
     record = {
         "bench": "serve_fused_vs_sequential",
@@ -185,6 +293,7 @@ def main():
         "compiled_shapes": fused_server.prefill.compiled_shapes,
         "fused": fused,
         "sequential": seq,
+        "tail_folding": tail_folding,
         # only a measured figure when actually serving sharded
         "fused_tok_per_s_per_device": (
             fused["tok_per_s"] / num_devices if mesh is not None else None
@@ -192,6 +301,7 @@ def main():
         "speedup": seq["wall_s"] / fused["wall_s"],
         "dispatch_amortization": seq["decode_steps"] / max(fused["decode_steps"], 1),
     }
+    validate_record(record)
     print(json.dumps(record, indent=2))
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -128,8 +128,10 @@ def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
     (offset: (M,B) int32; positions below ``prefill_prefix_len`` take
     the family's prefix embeddings and ignore the token ids).  vlm/audio
     additionally read batch["image_embeds"]/batch["frames"]; moe reads
-    batch["moe_limit"].  Returns the advanced carry — every family, any
-    prompt length, two compiled shapes total (C=chunk and C=1)."""
+    batch["moe_limit"]; batch["valid"] (M,B,C) bool marks the junk
+    suffix of a padded final chunk (tail folding — the junk never
+    reaches caches, routing or recurrent state).  Returns the advanced
+    carry — every family, any prompt length, ONE compiled shape."""
     return family_module(cfg).prefill_chunk(cfg, params, batch, carry, offset)
 
 

@@ -1,3 +1,7 @@
 """Pallas TPU kernels for the NetFuse hot spots (validated with
 interpret=True on CPU; see ops.py for dispatch)."""
 from repro.kernels import ops, ref
+from repro.kernels.chunk_prefill_attn import (
+    chunk_prefill_attention,
+    chunk_prefill_attention_sharded,
+)

@@ -1,0 +1,214 @@
+"""Pallas TPU kernel: chunked-prefill GQA flash attention over a KV cache.
+
+The serving admission hot spot after tail folding: every chunk call
+attends a C-token query block over ``[cache-before-chunk, chunk]``.
+This extends ``decode_attn.py`` from q-len 1 to q-len C — the cache's S
+axis streams through VMEM in blocks as the innermost grid axis, online-
+softmax running (max, sum, acc) state lives in VMEM scratch across
+S-steps (grid revisiting pattern), and the per-instance q tile
+(C·G x hd) is resident the whole time.
+
+Masking is ARITHMETIC, driven by the scalar-prefetched per-lane offsets
+(the absolute position of each lane's first chunk token): slot j of a
+pinned-prefix ring cache holds position j forever when j < pin (Hymba
+meta tokens), else rings over positions >= pin — exactly
+``layers.cache_positions_after(offset-1, S, pin)``; the appended chunk
+rows (slots >= S_cache) sit at offset + (slot - S_cache).  One rule
+covers causality, the sliding window, ring validity and the attention
+sink, so the dense O((S+C)·C) position/mask tensors the XLA path
+materializes per layer never exist here.
+
+Grid: (M, B, KVH, T/bs) with T = S_cache + C.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            ns: int, bs: int, c: int, g: int, hd: int, s_cache: int,
+            pin: int, window: int, sink: int, causal: bool):
+    mi, bi, si = pl.program_id(0), pl.program_id(1), pl.program_id(3)
+    cg = c * g
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :, 0].astype(jnp.float32).reshape(cg, hd)   # (C·G, hd)
+    k = k_ref[0, 0, :, 0].astype(jnp.float32)                   # (bs, hd)
+    v = v_ref[0, 0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T) / math.sqrt(hd)                         # (C·G, bs)
+
+    # positions from the lane offset alone (rows are C-major over G)
+    off = off_ref[mi, bi]
+    ci = jax.lax.broadcasted_iota(jnp.int32, (cg, bs), 0) // g
+    slot = si * bs + jax.lax.broadcasted_iota(jnp.int32, (cg, bs), 1)
+    q_pos = off + ci
+    # cache slots: pinned prefix + ring over positions >= pin
+    # (== layers.cache_positions_after(off - 1, s_cache, pin))
+    last = off - 1
+    pinned = jnp.where(slot <= last, slot, -1)
+    w = s_cache - pin
+    if w > 0:
+        qq = last - pin
+        cur = qq % w
+        base = qq - cur
+        i2 = slot - pin
+        ring = jnp.where(i2 <= cur, base + i2, base - w + i2) + pin
+        ring = jnp.where((qq >= 0) & (ring >= pin), ring, -1)
+        cache_pos = jnp.where(slot < pin, pinned, ring)
+    else:
+        cache_pos = pinned
+    # appended chunk rows ride at their own absolute positions
+    p = jnp.where(slot < s_cache, cache_pos, off + slot - s_cache)
+
+    valid = p >= 0
+    if causal:
+        valid = valid & (p <= q_pos)
+    if window > 0:
+        in_win = q_pos - p < window
+        if sink > 0:
+            in_win = in_win | (p < sink)
+        valid = valid & in_win
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                         # (C·G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    pexp = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + pexp.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(pexp, v)
+    m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _done():
+        o_ref[0, 0, :, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).reshape(c, g, hd).astype(o_ref.dtype)
+
+
+def _clamp(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "s_cache", "pin", "window", "sink", "causal", "block_s", "interpret"))
+def chunk_prefill_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    offset: jax.Array,
+    *,
+    s_cache: int,
+    pin: int = 0,
+    window: int = 0,
+    sink: int = 0,
+    causal: bool = True,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (M,B,C,H,hd); k,v: (M,B,T,KVH,hd) with T = s_cache + C — the
+    pre-chunk cache concatenated with the chunk's own k/v; offset: (M,B)
+    int32 absolute position of each lane's first chunk token.
+    Returns (M,B,C,H,hd)."""
+    m, b, c, h, hd = q.shape
+    t, kvh = k.shape[2], k.shape[3]
+    assert t == s_cache + c, (t, s_cache, c)
+    g = h // kvh
+    bs = _clamp(block_s, t)
+    ns = t // bs
+    grid = (m, b, kvh, ns)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    qg = q.reshape(m, b, c, kvh, g, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, 1, g, hd),
+                         lambda mi, bi, ki, si, off: (mi, bi, 0, ki, 0, 0)),
+            pl.BlockSpec((1, 1, bs, 1, hd),
+                         lambda mi, bi, ki, si, off: (mi, bi, si, ki, 0)),
+            pl.BlockSpec((1, 1, bs, 1, hd),
+                         lambda mi, bi, ki, si, off: (mi, bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, 1, g, hd),
+                               lambda mi, bi, ki, si, off: (mi, bi, 0, ki, 0, 0)),
+        scratch_shapes=[
+            _vmem((c * g, 1), jnp.float32),
+            _vmem((c * g, 1), jnp.float32),
+            _vmem((c * g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, ns=ns, bs=bs, c=c, g=g, hd=hd, s_cache=s_cache,
+            pin=pin, window=window, sink=sink, causal=causal,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, b, c, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(offset.astype(jnp.int32), qg, k, v)
+    return out.reshape(m, b, c, h, hd)
+
+
+def chunk_prefill_attention_sharded(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    offset: jax.Array,
+    *,
+    rules,
+    **kw,
+) -> jax.Array:
+    """``chunk_prefill_attention`` under ``shard_map`` on the rules' mesh.
+
+    Serving layout mirrors ``decode_attention_sharded``: (M, B) lanes
+    ride the data axes and KV-head groups ride "model" — q heads are
+    kvh-major, so a contiguous H-split of KVH/n groups matches a
+    contiguous KVH-split; each rank runs the kernel on its local block
+    with the (replicated) lane offsets and writes its output shard.
+    Exact with no collectives; interpret-mode fallback intact.  Falls
+    back to the plain (GSPMD-partitioned) call when KVH doesn't divide
+    the model axis.
+    """
+    from repro.launch.compat import shard_map
+
+    m, b, c, h, hd = q.shape
+    t, kvh = k.shape[2], k.shape[3]
+    n_model = rules._axis_size(rules.mapping.get("kv_heads"))
+    if n_model <= 1 or kvh % n_model or h % n_model:
+        return chunk_prefill_attention(q, k, v, offset, **kw)
+
+    q_spec = rules.spec(("instances", "batch", None, "kv_heads", None),
+                        (m, b, c, h, hd))
+    kv_spec = rules.spec(("instances", "batch", None, "kv_heads", None),
+                         (m, b, t, kvh, hd))
+    off_spec = rules.spec(("instances", "batch"), (m, b))
+    return shard_map(
+        lambda ql, kl, vl, ol: chunk_prefill_attention(ql, kl, vl, ol, **kw),
+        mesh=rules.mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, off_spec),
+        out_specs=q_spec,
+        check_vma=False,
+    )(q, k, v, offset)

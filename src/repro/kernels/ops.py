@@ -16,6 +16,10 @@ import os
 import jax
 
 from repro.kernels import ref
+from repro.kernels.chunk_prefill_attn import (
+    chunk_prefill_attention as _chunk_prefill_pl,
+    chunk_prefill_attention_sharded as _chunk_prefill_sh,
+)
 from repro.kernels.decode_attn import decode_attention as _decode_attention_pl
 from repro.kernels.decode_attn import decode_attention_sharded as _decode_attention_sh
 from repro.kernels.fused_matmul import fused_matmul as _fused_matmul_pl
@@ -57,6 +61,25 @@ def decode_attention(q, k, v, kv_len, *, use_pallas: bool = True, rules=None, **
         return _decode_attention_sh(q, k, v, kv_len, rules=rules,
                                     interpret=_interpret(), **kw)
     return _decode_attention_pl(q, k, v, kv_len, interpret=_interpret(), **kw)
+
+
+def chunk_prefill_attention(q, k, v, offset, *, s_cache: int, pin: int = 0,
+                            window: int = 0, sink: int = 0,
+                            use_pallas: bool = True, rules=None, **kw):
+    """Chunked-prefill flash attention over [cache-before, chunk]
+    (kernels/chunk_prefill_attn.py).  ``rules=`` runs the kernel under
+    shard_map — (M, B) lanes data-parallel, kv-head groups
+    tensor-parallel; see chunk_prefill_attention_sharded."""
+    if not use_pallas:
+        return ref.chunk_prefill_attention(
+            q, k, v, offset, s_cache=s_cache, pin=pin, window=window, sink=sink)
+    if rules is not None:
+        return _chunk_prefill_sh(
+            q, k, v, offset, rules=rules, s_cache=s_cache, pin=pin,
+            window=window, sink=sink, interpret=_interpret(), **kw)
+    return _chunk_prefill_pl(
+        q, k, v, offset, s_cache=s_cache, pin=pin, window=window, sink=sink,
+        interpret=_interpret(), **kw)
 
 
 def slstm_cell(pre, r, state, *, num_heads: int, use_pallas: bool = True, **kw):

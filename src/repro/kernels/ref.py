@@ -49,6 +49,46 @@ def decode_attention(
     return o.reshape(m, b, h, hd).astype(q.dtype)
 
 
+def chunk_prefill_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, offset: jax.Array, *,
+    s_cache: int, pin: int = 0, window: int = 0, sink: int = 0,
+    causal: bool = True,
+) -> jax.Array:
+    """Chunked-prefill GQA attention over [cache-before, chunk].
+
+    q: (M,B,C,H,hd); k,v: (M,B,s_cache + C,KVH,hd) — the pre-chunk cache
+    (pinned-prefix ring layout, ``pin`` slots pinned) concatenated with
+    the chunk's own k/v; offset: (M,B) int32 absolute position of the
+    chunk's first token.  Masking is positional: ring validity via
+    ``layers.cache_positions_after``, causality, sliding ``window`` with
+    the first ``sink`` positions exempt.  Returns (M,B,C,H,hd) in
+    q.dtype; softmax/accumulation in f32."""
+    from repro.models import layers as L
+
+    m, b, c, h, hd = q.shape
+    kvh = k.shape[3]
+    g = h // kvh
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)   # (M,B,C)
+    before = L.cache_positions_after(offset - 1, s_cache, pin)
+    kv_pos = jnp.concatenate([before, positions], axis=-1)           # (M,B,T)
+    qg = q.reshape(m, b, c, kvh, g, hd).astype(jnp.float32)
+    scores = jnp.einsum(
+        "mbckgd,mbskd->mbkgcs", qg, k.astype(jnp.float32)
+    ) / math.sqrt(hd)                                                # (M,B,KVH,G,C,T)
+    valid = kv_pos[:, :, None, :] >= 0                               # (M,B,1,T)
+    if causal:
+        valid = valid & (kv_pos[:, :, None, :] <= positions[..., None])
+    if window > 0:
+        in_win = positions[..., None] - kv_pos[:, :, None, :] < window
+        if sink > 0:
+            in_win = in_win | (kv_pos[:, :, None, :] < sink)
+        valid = valid & in_win
+    scores = jnp.where(valid[:, :, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("mbkgcs,mbskd->mbckgd", p, v.astype(jnp.float32))
+    return o.reshape(m, b, c, h, hd).astype(q.dtype)
+
+
 def slstm_cell(pre: jax.Array, r: jax.Array, state: tuple, *, num_heads: int):
     """sLSTM scan oracle (mirrors repro.models.ssm.slstm_block's step).
 

@@ -53,6 +53,9 @@ def main():
                     help="max prefill chunk calls interleaved per engine step")
     ap.add_argument("--lanes", type=int, default=4,
                     help="concurrent prefill lanes (requests mid-admission)")
+    ap.add_argument("--no-tail-fold", action="store_true",
+                    help="disable padded-final-chunk tail folding (two "
+                         "compiled shapes + per-token tail calls, for A/B)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -96,7 +99,8 @@ def main():
         cfg, merged, slots_per_instance=args.slots, max_context=max_context,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         scheduler=args.policy, prefill_chunk=args.chunk,
-        prefill_lanes=args.lanes, chunk_budget=args.chunk_budget, mesh=mesh,
+        prefill_lanes=args.lanes, chunk_budget=args.chunk_budget,
+        tail_fold=not args.no_tail_fold, mesh=mesh,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -110,7 +114,10 @@ def main():
           f"({toks/dt:.1f} tok/s, {server.steps} fused decode steps, "
           f"policy={args.policy})")
     print(f"chunked prefill: chunk={server.prefill.chunk}, "
-          f"{server.prefill.compiled_shapes} compiled shapes (chunk + tail), "
+          f"tail_fold={'off' if args.no_tail_fold else 'on'}, "
+          f"{server.prefill.compiled_shapes} compiled shape(s), "
+          f"{server.prefill.device_calls} device calls for "
+          f"{server.prefill.admitted} admissions, "
           f"{1e3 * server.metrics.admission_stall_s:.1f} ms admission stall")
     print(server.metrics.format_table())
     for r in results[:4]:

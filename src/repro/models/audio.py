@@ -301,6 +301,7 @@ def prefill_chunk(cfg, params, batch, carry, offset):
 
     tokens, frames = batch["tokens"], batch["frames"]
     cache = carry["cache"]
+    valid = batch.get("valid")            # (M,B,C) tail-folding junk mask
     m, b, c = tokens.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     dt = jnp.dtype(cfg.dtype)
@@ -341,8 +342,8 @@ def prefill_chunk(cfg, params, batch, carry, offset):
         xc = xc + L.linear(o.reshape(m, b, c, h * hd), lp["x_wo"], lp.get("x_bo"))
         n = L.layer_norm(xc, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
         xc = xc + L.gelu_mlp(n, lp["w1"], lp["b1"], lp["w2"], lp["b2"])
-        nk = constrain_axes(L.cache_append_chunk(ck, k, positions, 0), kv_ax)
-        nv = constrain_axes(L.cache_append_chunk(cv, v, positions, 0), kv_ax)
+        nk = constrain_axes(L.cache_append_chunk(ck, k, positions, 0, valid), kv_ax)
+        nv = constrain_axes(L.cache_append_chunk(cv, v, positions, 0, valid), kv_ax)
         return xc, (nk, nv, xk.astype(dt), xv.astype(dt))
 
     _, (nk, nv, xks, xvs) = lax.scan(body, x, (params["dec_layers"], cache["self"].k, cache["self"].v))

@@ -207,9 +207,14 @@ def constrain_tree(tree, axes_tree):
 # is the (M, B) absolute position of the chunk's first token — families
 # with a learned prefix (hybrid meta tokens, vlm image patches) count
 # prefix positions in the same stream, substituting prefix embeddings
-# for positions below the prefix length.  The helpers below let the
-# serving runtime keep K independent requests ("lanes") in ONE carry
-# tree: a (K,) mask selects which lanes actually advance each call.
+# for positions below the prefix length.  ``batch["valid"]`` (M, B, C)
+# bool, when present, marks the junk suffix of a PADDED final chunk
+# (serving tail folding — DESIGN.md §6.3): KV families drop the junk
+# cache scatters, moe masks routing, recurrent families make the junk
+# steps gate-neutral, so the carry equals the exact-length pass.  The
+# helpers below let the serving runtime keep K independent requests
+# ("lanes") in ONE carry tree: a (K,) mask selects which lanes actually
+# advance each call.
 
 
 def tree_select_lanes(mask, new_tree, old_tree, axes_tree):

@@ -203,15 +203,18 @@ def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
     offset..offset+C-1 (offset (M,B) int32, may differ per instance
     row).  The carry's KV cache holds every earlier position; the chunk
     attends over [cache-so-far, chunk] and appends its k/v at the ring
-    slots, so any prompt length runs through the same two compiled
-    shapes (chunk + tail)."""
+    slots, so any prompt length runs through the same compiled shape.
+    batch["valid"] (M,B,C) bool, when present, marks the junk suffix of
+    a padded final chunk (tail folding): invalid rows never reach the
+    cache, and causality keeps them invisible to the real queries."""
     x = _embed_in(cfg, params, batch["tokens"])
-    return _prefill_chunk_embeds(cfg, params, x, carry, offset)
+    return _prefill_chunk_embeds(cfg, params, x, carry, offset,
+                                 valid=batch.get("valid"))
 
 
-def _prefill_chunk_embeds(cfg: ModelConfig, params, x, carry, offset):
+def _prefill_chunk_embeds(cfg: ModelConfig, params, x, carry, offset, valid=None):
     """Chunk body on precomputed input embeddings (shared with vlm)."""
-    from repro.models.common import constrain_axes
+    from repro.models.common import active_rules, constrain_axes
 
     cache = carry["cache"]
     m, b, c, _ = x.shape
@@ -234,20 +237,27 @@ def _prefill_chunk_embeds(cfg: ModelConfig, params, x, carry, offset):
         v = L.linear(n, lp["wv"], lp.get("bv")).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
         q = L.rope(q, positions, cfg.rope_theta)
         k = L.rope(k, positions, cfg.rope_theta)
-        o = L.flash_attention(
-            q,
-            jnp.concatenate([ck, k.astype(ck.dtype)], axis=2),
-            jnp.concatenate([cv, v.astype(cv.dtype)], axis=2),
-            positions, kv_pos, window=window,
-        )
+        k_all = jnp.concatenate([ck, k.astype(ck.dtype)], axis=2)
+        v_all = jnp.concatenate([cv, v.astype(cv.dtype)], axis=2)
+        if cfg.use_pallas_kernels:
+            # Pallas chunk-prefill flash attention: streams the cache S
+            # axis through VMEM with online softmax, positions derived
+            # in-kernel from the scalar-prefetched lane offsets
+            from repro.kernels import ops as K
+            o = K.chunk_prefill_attention(
+                q, k_all, v_all, offset, s_cache=s_cache, window=window,
+                rules=active_rules(),
+            )
+        else:
+            o = L.flash_attention(q, k_all, v_all, positions, kv_pos, window=window)
         xc = xc + L.linear(o.reshape(m, b, c, -1), lp["wo"], lp.get("bo"))
         nn = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
         xc = xc + L.swiglu_mlp(nn, lp["w_gate"], lp["w_up"], lp["w_down"])
         # pin the appended cache to its logical layout inside the scan
         # body — without the constraint GSPMD re-derives the kv sharding
         # per iteration and can fall back to full rematerialization
-        nk = constrain_axes(L.cache_append_chunk(ck, k, positions, 0), kv_ax)
-        nv = constrain_axes(L.cache_append_chunk(cv, v, positions, 0), kv_ax)
+        nk = constrain_axes(L.cache_append_chunk(ck, k, positions, 0, valid), kv_ax)
+        nv = constrain_axes(L.cache_append_chunk(cv, v, positions, 0, valid), kv_ax)
         return xc, (nk, nv)
 
     _, (nk, nv) = lax.scan(body, x, (params["layers"], cache.k, cache.v))

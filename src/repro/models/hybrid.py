@@ -216,9 +216,13 @@ def _ssd_chunk_scan(u, da, b_in, c_out, h0, *, chunk: int = 64):
     return y, h_fin
 
 
-def mamba_branch(cfg: ModelConfig, lp, xn, *, state=None):
+def mamba_branch(cfg: ModelConfig, lp, xn, *, state=None, valid=None):
     """Selective SSM, SSD (head-shared-decay) form. xn: (M,B,S,D).
     state (decode): {"h": (M,B,Di,N) f32, "conv": (M,B,K-1,Di)}.
+    ``valid`` (M,B,S) bool marks the junk suffix of a padded final chunk
+    (serving tail folding): junk steps are made gate-neutral (zero decay,
+    zero input → h unchanged) and the conv window is gathered at the last
+    VALID inputs, so the carried state matches the exact-length pass.
     Returns (out (M,B,S,D), new_state)."""
     m, b, s, d = xn.shape
     di, n = d_inner(cfg), cfg.ssm_state
@@ -228,7 +232,9 @@ def mamba_branch(cfg: ModelConfig, lp, xn, *, state=None):
     up = L.linear(xn, lp["w_ssm_in"])                          # (M,B,S,2Di)
     xi, z = up[..., :di], up[..., di:]
     conv_state = state["conv"] if state is not None else None
-    xc, new_conv = _conv(xi, lp["conv_w"], lp["conv_b"], conv_state)
+    nvalid = valid.sum(-1).astype(jnp.int32) if valid is not None else None
+    xc, new_conv = _conv(xi, lp["conv_w"], lp["conv_b"], conv_state,
+                         nvalid=nvalid)
     xc = jax.nn.silu(xc)
 
     bcp = L.linear(xc, lp["w_bc"]).astype(jnp.float32)         # (M,B,S,2N)
@@ -242,6 +248,11 @@ def mamba_branch(cfg: ModelConfig, lp, xn, *, state=None):
 
     xh = xc.reshape(m, b, s, nh, hd).astype(jnp.float32)
     u = dt[..., None] * xh                                     # (M,B,S,H,hd)
+    if valid is not None:
+        # gate-neutral junk: exp(0)·h + 0 = h — the recurrence skips the
+        # padded steps exactly (their y outputs are garbage, discarded)
+        da = jnp.where(valid[..., None], da, 0.0)
+        u = jnp.where(valid[..., None, None], u, 0.0)
 
     if state is None or s > 1:
         h0 = (
@@ -266,19 +277,17 @@ def mamba_branch(cfg: ModelConfig, lp, xn, *, state=None):
     return out, new_state
 
 
-def _conv(x, w, bias, conv_state=None):
+def _conv(x, w, bias, conv_state=None, nvalid=None):
+    """Depthwise causal conv — the mamba branch shares ssm's cell
+    (incl. the tail-folding nvalid window gather), but keeps its own
+    no-state short-sequence pad: a stateless call over fewer than K-1
+    positions still emits a full (K-1)-deep conv state."""
+    from repro.models.ssm import _causal_conv
+
     k = w.shape[1]
-    if conv_state is None:
-        pads = [jnp.pad(x, ((0, 0), (0, 0), (j, 0), (0, 0)))[:, :, : x.shape[2]] for j in range(k)]
-        new_state = x[:, :, -(k - 1):] if x.shape[2] >= k - 1 else jnp.pad(
-            x, ((0, 0), (0, 0), (k - 1 - x.shape[2], 0), (0, 0))
-        )
-    else:
-        ext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=2)
-        pads = [ext[:, :, k - 1 - j : k - 1 - j + x.shape[2]] for j in range(k)]
-        new_state = ext[:, :, -(k - 1):]
-    y = sum(w[:, j, :][:, None, None, :].astype(x.dtype) * pads[j] for j in range(k))
-    return y + bias[:, None, None, :].astype(x.dtype), new_state
+    if conv_state is None and nvalid is None and x.shape[2] < k - 1:
+        conv_state = jnp.zeros(x.shape[:2] + (k - 1, x.shape[3]), x.dtype)
+    return _causal_conv(x, w, bias, conv_state, nvalid=nvalid)
 
 
 def mamba_state_shape(cfg, m, b):
@@ -544,10 +553,11 @@ def prefill_chunk(cfg, params, batch, carry, offset):
     a ring slot overwritten by this chunk is still visible to exactly
     the chunk queries that precede the overwriting position.  Mamba
     states thread through ``mamba_branch(state=...)`` as in decode."""
-    from repro.models.common import constrain_axes
+    from repro.models.common import active_rules, constrain_axes
 
     tokens = batch["tokens"]
     cache = carry["cache"]
+    valid = batch.get("valid")            # (M,B,C) tail-folding junk mask
     m, b, c = tokens.shape
     r = NUM_META_TOKENS
     positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)   # (M,B,C)
@@ -571,7 +581,7 @@ def prefill_chunk(cfg, params, batch, carry, offset):
         before = L.cache_positions_after(offset - 1, s_cache, pin)
         kv_pos = jnp.concatenate([before, positions], axis=-1)
 
-        def body(xc, xs, win=win, pin=pin, kv_pos=kv_pos):
+        def body(xc, xs, win=win, pin=pin, kv_pos=kv_pos, s_cache=s_cache):
             lp, ck, cv, sh, sconv = xs
             xn = L.rms_norm(xc, lp["norm"], cfg.norm_eps)
             q = L.linear(xn, lp["wq"]).reshape(m, b, c, cfg.num_heads, cfg.head_dim)
@@ -579,15 +589,24 @@ def prefill_chunk(cfg, params, batch, carry, offset):
             vv = L.linear(xn, lp["wv"]).reshape(m, b, c, cfg.num_kv_heads, cfg.head_dim)
             q = L.rope(q, positions, cfg.rope_theta)
             kk = L.rope(kk, positions, cfg.rope_theta)
-            o = L.flash_attention(
-                q,
-                jnp.concatenate([ck, kk.astype(ck.dtype)], axis=2),
-                jnp.concatenate([cv, vv.astype(cv.dtype)], axis=2),
-                positions, kv_pos, window=win, sink=r,
-            )
+            k_all = jnp.concatenate([ck, kk.astype(ck.dtype)], axis=2)
+            v_all = jnp.concatenate([cv, vv.astype(cv.dtype)], axis=2)
+            if cfg.use_pallas_kernels:
+                # the group's window/pin are static (groups are a python
+                # loop), so the Pallas chunk-prefill kernel derives the
+                # causal+window+ring+sink mask from the lane offsets alone
+                from repro.kernels import ops as K
+                o = K.chunk_prefill_attention(
+                    q, k_all, v_all, offset, s_cache=s_cache, pin=pin,
+                    window=win, sink=r, rules=active_rules(),
+                )
+            else:
+                o = L.flash_attention(
+                    q, k_all, v_all, positions, kv_pos, window=win, sink=r,
+                )
             attn_out = L.linear(o.reshape(m, b, c, -1), lp["wo"])
             ssm_out, nssm = mamba_branch(
-                cfg, lp, xn, state={"h": sh, "conv": sconv}
+                cfg, lp, xn, state={"h": sh, "conv": sconv}, valid=valid
             )
             fused = 0.5 * (
                 _norm_branch(attn_out, lp["attn_out_norm"], cfg.norm_eps)
@@ -596,8 +615,8 @@ def prefill_chunk(cfg, params, batch, carry, offset):
             xc = xc + fused
             n = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
             xc = xc + L.swiglu_mlp(n, lp["w_gate"], lp["w_up"], lp["w_down"])
-            nk = constrain_axes(L.cache_append_chunk(ck, kk, positions, pin), kv_ax)
-            nv = constrain_axes(L.cache_append_chunk(cv, vv, positions, pin), kv_ax)
+            nk = constrain_axes(L.cache_append_chunk(ck, kk, positions, pin, valid), kv_ax)
+            nv = constrain_axes(L.cache_append_chunk(cv, vv, positions, pin, valid), kv_ax)
             return xc, (nk, nv, nssm["h"], nssm["conv"])
 
         x, (nk, nv, nh, nconv) = lax.scan(

@@ -345,7 +345,8 @@ def cache_positions_after(last_pos: jax.Array, s_cache: int, pin: int = 0) -> ja
 
 
 def cache_append_chunk(
-    cache_layer: jax.Array, new: jax.Array, positions: jax.Array, pin: int = 0
+    cache_layer: jax.Array, new: jax.Array, positions: jax.Array, pin: int = 0,
+    valid: jax.Array | None = None,
 ) -> jax.Array:
     """Write a chunk of k/v rows into their cache slots.
 
@@ -355,14 +356,21 @@ def cache_append_chunk(
     Positions inside one chunk must map to distinct slots (the serving
     runtime clamps the chunk size to the ring width), so the scatter has
     no duplicate indices.
+
+    ``valid`` (M,B,C) bool masks the scatter: invalid rows (the junk
+    suffix of a padded final chunk — tail folding) are routed to an
+    out-of-range slot and dropped, so padding can neither occupy fresh
+    slots nor wrap the ring over live entries.
     """
     m, b, s, kvh, hd = cache_layer.shape
     c = new.shape[2]
     w = max(s - pin, 1)
     slots = jnp.where(positions < pin, positions, pin + (positions - pin) % w)
+    if valid is not None:
+        slots = jnp.where(valid, slots, s)
 
     def upd(cl, x, sl):
-        return cl.at[sl].set(x)
+        return cl.at[sl].set(x, mode="drop")
 
     out = jax.vmap(upd)(
         cache_layer.reshape(m * b, s, kvh, hd),

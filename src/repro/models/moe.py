@@ -98,30 +98,37 @@ def capacity(cfg: ModelConfig, s: int) -> int:
     return max(1, math.ceil(s * cfg.num_experts_per_tok / cfg.num_experts * cfg.capacity_factor))
 
 
+def _sorted_keep(e_sorted, cap, num_experts, counts=None, limit=None):
+    """The keep/drop rule over one row's sorted assignment stream —
+    shared by the plain and the expert-window (ep) dispatch so the two
+    paths cannot drift apart (ep-vs-plain routing parity is a tested
+    invariant): local position-in-expert below the chunk-local ``cap``,
+    sentinel (masked-token) assignments excluded, and — when ``counts``
+    carries earlier chunks' per-expert totals — GLOBAL position below
+    ``limit``, the request's exact-length capacity.  Returns (pos, keep)."""
+    sk = e_sorted.shape[0]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(num_experts, dtype=e_sorted.dtype))
+    eid = jnp.minimum(e_sorted, num_experts - 1)
+    pos = jnp.arange(sk, dtype=jnp.int32) - starts[eid].astype(jnp.int32)
+    keep = (e_sorted < num_experts) & (pos < cap)
+    if counts is not None:
+        keep = keep & (counts[eid].astype(jnp.int32) + pos < limit)
+    return pos, keep
+
+
 def _row_dispatch(x_row, e_sorted, order, cap, num_experts, counts=None, limit=None):
     """Per-(m,b) row: build the (E*C, D) dispatch buffer.
 
     x_row: (S, D); e_sorted: (S*K,) expert id per sorted assignment
     (``num_experts`` is the sentinel id for masked-out assignments —
     they sort last and are never kept); order: (S*K,) argsort
-    permutation.  ``counts`` ((E,) int32 per-expert assignments already
-    made by EARLIER chunks of the same request) and ``limit`` (scalar
-    int32 capacity derived from the request's real token count) switch
-    the keep rule to the chainable chunked form: an assignment survives
-    iff its GLOBAL position-in-expert (carry + local) is below the
-    request's exact-length capacity, so chunked prefill routes
-    identically to one exact-length pass.  Returns (buffer (E*C, D),
-    dest, keep, tok_sorted)."""
+    permutation.  ``counts``/``limit`` switch :func:`_sorted_keep` to
+    the chainable chunked form, so chunked prefill routes identically
+    to one exact-length pass.  Returns (buffer (E*C, D), dest, keep,
+    tok_sorted)."""
     sk = e_sorted.shape[0]
     k = sk // x_row.shape[0]
-    starts = jnp.searchsorted(e_sorted, jnp.arange(num_experts, dtype=e_sorted.dtype))
-    pos = jnp.arange(sk, dtype=jnp.int32) - starts[
-        jnp.minimum(e_sorted, num_experts - 1)
-    ].astype(jnp.int32)
-    keep = (e_sorted < num_experts) & (pos < cap)
-    if counts is not None:
-        gpos = counts[jnp.minimum(e_sorted, num_experts - 1)].astype(jnp.int32) + pos
-        keep = keep & (gpos < limit)
+    pos, keep = _sorted_keep(e_sorted, cap, num_experts, counts, limit)
     dest = jnp.where(keep, e_sorted.astype(jnp.int32) * cap + pos, num_experts * cap)
     tok_sorted = (order // k).astype(jnp.int32)
     buf = jnp.zeros((num_experts * cap, x_row.shape[1]), x_row.dtype)
@@ -174,16 +181,17 @@ def _shmap_rows(fn, rules, in_args, in_logical, out_logical):
     )(*in_args)
 
 
-def _row_dispatch_window(x_row, e_sorted, order, cap, num_experts, lo, e_local):
+def _row_dispatch_window(x_row, e_sorted, order, cap, num_experts, lo, e_local,
+                         counts=None, limit=None):
     """Like _row_dispatch but scatters only assignments whose destination
     falls in the expert window [lo·cap, (lo+e_local)·cap) — the local
     expert shard.  Returns (buffer (e_local·cap, D), dest, keep_l,
-    tok_sorted); dest stays GLOBAL so the caller's combine can share it."""
+    tok_sorted); dest stays GLOBAL so the caller's combine can share it.
+    The keep rule (incl. the masked/chainable chunked form) is the SAME
+    :func:`_sorted_keep` the plain dispatch uses."""
     sk = e_sorted.shape[0]
     k = sk // x_row.shape[0]
-    starts = jnp.searchsorted(e_sorted, jnp.arange(num_experts, dtype=e_sorted.dtype))
-    pos = jnp.arange(sk, dtype=jnp.int32) - starts[e_sorted].astype(jnp.int32)
-    keep = pos < cap
+    pos, keep = _sorted_keep(e_sorted, cap, num_experts, counts, limit)
     dest = jnp.where(keep, e_sorted.astype(jnp.int32) * cap + pos, num_experts * cap)
     tok_sorted = (order // k).astype(jnp.int32)
     local = keep & (dest >= lo * cap) & (dest < (lo + e_local) * cap)
@@ -193,7 +201,8 @@ def _row_dispatch_window(x_row, e_sorted, order, cap, num_experts, lo, e_local):
     return buf, dest_l, local, tok_sorted
 
 
-def _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s):
+def _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s,
+                      counts=None, limit=None):
     """Canonical expert parallelism in ONE shard_map (§Perf qwen3-moe
     iteration 4).
 
@@ -223,15 +232,26 @@ def _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s):
     # standard FSDP per-layer weight gather, not an EP cost.
     wg_spec = rules.spec(("instances", "experts", None, None), (m, e, d, f))
     wd_spec = rules.spec(("instances", "experts", None, None), (m, e, f, d))
+    # chunked extras ride as explicit batch-sharded inputs (replicated
+    # over "model", like the dispatch rows) so every rank applies the
+    # SAME global counts+limit keep rule to its expert window; the
+    # non-chunked call passes neutral dummies (0 counts, INT32_MAX
+    # limit), under which the chunked keep rule collapses to the plain
+    # one — a single code path either way
+    if counts is None:
+        counts = jnp.zeros((m, x.shape[1], e), jnp.int32)
+        limit = jnp.full((m, x.shape[1]), jnp.iinfo(jnp.int32).max, jnp.int32)
 
-    def body(x_l, es_l, od_l, ws_l, wg, wu, wd):
+    def body(x_l, es_l, od_l, ws_l, ct_l, lm_l, wg, wu, wd):
         e_local = wg.shape[1]
         lo = lax.axis_index("model") * e_local if e_local != e else 0
 
-        def row(xr, es, od):
-            return _row_dispatch_window(xr, es, od, cap, e, lo, e_local)
+        def row(xr, es, od, ct, lm):
+            return _row_dispatch_window(xr, es, od, cap, e, lo, e_local,
+                                        counts=ct, limit=lm)
 
-        buf, dest_l, local, tok = jax.vmap(jax.vmap(row))(x_l, es_l, od_l)
+        buf, dest_l, local, tok = jax.vmap(jax.vmap(row))(
+            x_l, es_l, od_l, ct_l, lm_l)
         m_l, b_l = buf.shape[0], buf.shape[1]
         buf = buf.reshape(m_l, b_l, e_local, cap, d)
 
@@ -249,12 +269,16 @@ def _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s):
         return part                                  # (m_l, b_l, s, d)
 
     out_spec = rules.spec(("instances", "batch", None, None), (m, b, s, d))
+    ct_spec = rules.spec(("instances", "batch", None), counts.shape)
+    lm_spec = rules.spec(("instances", "batch"), limit.shape)
     return jax.shard_map(
         body, mesh=mesh,
-        in_specs=(x_spec, row_spec, row_spec, row_spec, wg_spec, wg_spec, wd_spec),
+        in_specs=(x_spec, row_spec, row_spec, row_spec, ct_spec, lm_spec,
+                  wg_spec, wg_spec, wd_spec),
         out_specs=out_spec,
         check_vma=False,
-    )(x, e_sorted, order, w_sorted, lp["we_gate"], lp["we_up"], lp["we_down"])
+    )(x, e_sorted, order, w_sorted, counts, limit,
+      lp["we_gate"], lp["we_up"], lp["we_down"])
 
 
 def moe_mlp(cfg: ModelConfig, lp, x, *, valid=None, counts=None, limit=None):
@@ -325,20 +349,23 @@ def moe_mlp(cfg: ModelConfig, lp, x, *, valid=None, counts=None, limit=None):
     #             dispatch + local einsums + token-space psum (wire per
     #             layer = token bytes; see _moe_mlp_ep_shmap).
     placement = rules.mapping.get("experts_compute") if rules is not None else None
-    if placement == "ep" and (chunked or valid is not None):
-        raise NotImplementedError(
-            "masked/chainable MoE routing (serving chunked prefill) is not "
-            "implemented for the experts_compute='ep' shard_map variant; "
-            "serve under serve_rules (experts_compute='model') instead"
-        )
     if placement == "ep":
-        out = _moe_mlp_ep_shmap(rules, lp, x, e_sorted, order, w_sorted, cap, e, s)
+        # masked/chainable routing works here too: the sentinel expert id
+        # sorts masked tokens last (never kept in any window) and the
+        # global counts+limit keep rule is applied per rank before the
+        # window filter, so the ep path routes exactly like the plain one
+        out = _moe_mlp_ep_shmap(
+            rules, lp, x, e_sorted, order, w_sorted, cap, e, s,
+            counts=counts, limit=limit,
+        )
         out = constrain(out, "instances", "batch", "seq", "act_embed")
         frac = jnp.mean(
             (jax.nn.one_hot(top_e, e, dtype=jnp.float32)).sum(-2), axis=(1, 2)
         )
         pmean = probs.mean(axis=(1, 2))
         aux = (e * (frac / k * pmean).sum(-1)).mean()
+        if chunked:
+            return out, aux, new_counts
         return out, aux
 
     row2 = ("instances", "batch", None)
@@ -531,6 +558,7 @@ def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
 
     tokens, limit = batch["tokens"], batch["moe_limit"]
     cache, counts = carry["cache"], carry["counts"]
+    valid = batch.get("valid")            # (M,B,C) tail-folding junk mask
     m, b, c = tokens.shape
     x = L.embed(tokens, params["embed"], jnp.dtype(cfg.dtype))
     positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)
@@ -556,10 +584,10 @@ def prefill_chunk(cfg: ModelConfig, params, batch, carry, offset):
         )
         xc = xc + L.linear(o.reshape(m, b, c, -1), lp["wo"], lp.get("bo"))
         n = L.rms_norm(xc, lp["mlp_norm"], cfg.norm_eps)
-        y, _, new_cnt = moe_mlp(cfg, lp, n, counts=cnt, limit=limit)
+        y, _, new_cnt = moe_mlp(cfg, lp, n, valid=valid, counts=cnt, limit=limit)
         xc = xc + y
-        nk = constrain_axes(L.cache_append_chunk(ck, kk, positions, 0), kv_ax)
-        nv = constrain_axes(L.cache_append_chunk(cv, vv, positions, 0), kv_ax)
+        nk = constrain_axes(L.cache_append_chunk(ck, kk, positions, 0, valid), kv_ax)
+        nv = constrain_axes(L.cache_append_chunk(cv, vv, positions, 0, valid), kv_ax)
         return xc, (nk, nv, new_cnt)
 
     _, (nk, nv, ncnt) = lax.scan(body, x, (params["layers"], cache.k, cache.v, counts))

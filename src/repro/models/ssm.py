@@ -258,20 +258,29 @@ def mlstm_step(state, q, k, v, lf, li):
 # ---------------------------------------------------------------------------
 
 
-def _causal_conv(x, w, b, conv_state=None):
+def _causal_conv(x, w, b, conv_state=None, nvalid=None):
     """Depthwise causal conv via shifted adds. x: (M,B,S,Di); w: (M,K,Di).
-    conv_state: (M,B,K-1,Di) trailing inputs from the previous call."""
+    conv_state: (M,B,K-1,Di) trailing inputs from the previous call.
+    ``nvalid`` (M,B) int32 — count of VALID leading positions (serving
+    tail folding): the carried window is gathered at the last valid
+    inputs instead of the chunk's junk suffix."""
     k = w.shape[1]
+    if conv_state is None and nvalid is not None:
+        conv_state = jnp.zeros(x.shape[:2] + (k - 1, x.shape[3]), x.dtype)
     if conv_state is None:
         pads = [jnp.pad(x, ((0, 0), (0, 0), (j, 0), (0, 0)))[:, :, : x.shape[2]] for j in range(k)]
+        new_state = x[:, :, -(k - 1):]
     else:
         ext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=2)
         pads = [ext[:, :, k - 1 - j : k - 1 - j + x.shape[2]] for j in range(k)]
+        if nvalid is None:
+            new_state = ext[:, :, -(k - 1):]
+        else:
+            idx = nvalid[..., None] + jnp.arange(k - 1, dtype=jnp.int32)
+            new_state = jnp.take_along_axis(
+                ext, idx[..., None].astype(jnp.int32), axis=2
+            )
     y = sum(w[:, j, :][:, None, None, :].astype(x.dtype) * pads[j] for j in range(k))
-    new_state = (
-        jnp.concatenate([conv_state.astype(x.dtype), x], axis=2)[:, :, -(k - 1):]
-        if conv_state is not None else x[:, :, -(k - 1):]
-    )
     return y + b[:, None, None, :].astype(x.dtype), new_state
 
 
@@ -280,8 +289,11 @@ def _head_proj(x, w):
     return jnp.einsum("mbshd,mhde->mbshe", x, w.astype(x.dtype))
 
 
-def mlstm_block(cfg: ModelConfig, lp, x, *, state=None, chunk: int = 64):
-    """x: (M,B,S,D). state (decode): dict(C,n,m,conv). Returns (y, state)."""
+def mlstm_block(cfg: ModelConfig, lp, x, *, state=None, chunk: int = 64, valid=None):
+    """x: (M,B,S,D). state (decode): dict(C,n,m,conv). Returns (y, state).
+    ``valid`` (M,B,S) bool: junk suffix of a padded final chunk (serving
+    tail folding) is made gate-neutral — log-forget 0, log-input -inf —
+    so the (C, n, m) carry skips the padded steps exactly."""
     m, b, s, d = x.shape
     di, h = d_inner(cfg), cfg.num_heads
     hd = di // h
@@ -290,7 +302,9 @@ def mlstm_block(cfg: ModelConfig, lp, x, *, state=None, chunk: int = 64):
     up = L.linear(xn, lp["w_up"])                              # (M,B,S,2Di)
     xi, z = up[..., :di], up[..., di:]
     conv_state = state["conv"] if state is not None else None
-    xc, new_conv = _causal_conv(xi, lp["conv_w"], lp["conv_b"], conv_state)
+    nvalid = valid.sum(-1).astype(jnp.int32) if valid is not None else None
+    xc, new_conv = _causal_conv(xi, lp["conv_w"], lp["conv_b"], conv_state,
+                                nvalid=nvalid)
     xc = jax.nn.silu(xc)
 
     xch = xc.reshape(m, b, s, h, hd)
@@ -301,6 +315,9 @@ def mlstm_block(cfg: ModelConfig, lp, x, *, state=None, chunk: int = 64):
     gates = L.linear(xc, lp["w_gates"], lp["b_gates"]).astype(jnp.float32)  # (M,B,S,2H)
     li = gates[..., :h]
     lf = jax.nn.log_sigmoid(gates[..., h:])
+    if valid is not None:
+        li = jnp.where(valid[..., None], li, -1e30)
+        lf = jnp.where(valid[..., None], lf, 0.0)
 
     # to (M,B,H,S,...) layout
     tr = lambda t: jnp.moveaxis(t, 3, 2)                       # (M,B,H,S,hd)
@@ -358,9 +375,14 @@ def mlstm_state_shape(cfg: ModelConfig, m: int, b: int):
 # ---------------------------------------------------------------------------
 
 
-def slstm_block(cfg: ModelConfig, lp, x, *, state=None):
+def slstm_block(cfg: ModelConfig, lp, x, *, state=None, valid=None):
     """x: (M,B,S,D). Sequential scan over time (sLSTM is strictly
-    recurrent through h). state: dict(c,n,h,m) each (M,B,D)."""
+    recurrent through h). state: dict(c,n,h,m) each (M,B,D).
+    ``valid`` (M,B,S) bool: junk steps (serving tail folding) get forced
+    gate pre-activations (forget +inf, input -inf) so c/n/m are carried
+    unchanged — works for the scan AND the Pallas cell, which both derive
+    gates from ``pre``; the h carry is re-gathered at the last valid step
+    afterwards (h is the one state the gates can't protect)."""
     m, b, s, d = x.shape
     h_heads = cfg.num_heads
     hd = d // h_heads
@@ -370,6 +392,12 @@ def slstm_block(cfg: ModelConfig, lp, x, *, state=None):
     # upcast per step — the (M,B,S,4D) f32 buffer otherwise dominates the
     # scan's HBM traffic (§Perf xlstm iteration).  Gate math is f32.
     pre = L.linear(xn, lp["w_in"], lp["b_in"]).reshape(m, b, s, 4, d)
+    if valid is not None:
+        # (z, i, f, o) slots: input gate -> -BIG (exp underflows to 0),
+        # forget gate -> +BIG (log_sigmoid saturates to exactly 0)
+        neutral = jnp.asarray([0.0, -1e30, 1e30, 0.0], pre.dtype)
+        pre = jnp.where(valid[..., None, None],
+                        pre, neutral.reshape(1, 1, 1, 4, 1))
 
     if state is None:
         st = tuple(jnp.zeros((m, b, d), jnp.float32) for _ in range(3)) + (
@@ -418,6 +446,17 @@ def slstm_block(cfg: ModelConfig, lp, x, *, state=None):
         )
         hs = jnp.moveaxis(hs, 0, 2)                            # (M,B,S,D)
 
+    if valid is not None:
+        # gate-neutral junk leaves c/n/m untouched but every step still
+        # emits an h — re-select the h carry at the last VALID step (or
+        # keep the incoming h when the whole chunk is junk)
+        nv = valid.sum(-1).astype(jnp.int32)                   # (M,B)
+        idx = jnp.clip(nv - 1, 0, s - 1)[..., None, None]
+        h_sel = jnp.take_along_axis(
+            hs, jnp.broadcast_to(idx, (m, b, 1, d)), axis=2
+        )[:, :, 0]
+        hlast = jnp.where((nv > 0)[..., None], h_sel, st[2])
+
     # per-head group norm + residual, then gated FFN
     hh = hs.reshape(m, b, s, h_heads, hd)
     mu = hh.mean(-1, keepdims=True)
@@ -446,9 +485,10 @@ def slstm_state_shape(cfg: ModelConfig, m: int, b: int):
 # ---------------------------------------------------------------------------
 
 
-def _trunk(cfg, params, x, *, states=None, chunk=None, remat=False):
+def _trunk(cfg, params, x, *, states=None, chunk=None, remat=False, valid=None):
     """Run all blocks. states: None or dict(mlstm_runs=[...], slstm=[...]).
-    Returns (x, new_states)."""
+    ``valid`` (M,B,S): serving tail-folding junk mask, threaded to every
+    recurrent cell.  Returns (x, new_states)."""
     runs = mlstm_runs(cfg)
     if chunk is None:
         chunk = cfg.mlstm_chunk
@@ -461,7 +501,8 @@ def _trunk(cfg, params, x, *, states=None, chunk=None, remat=False):
 
             def body(xc, xs, _n=n):
                 lp, st = xs
-                out, new_st = mlstm_block(cfg, lp, xc, state=st, chunk=chunk)
+                out, new_st = mlstm_block(cfg, lp, xc, state=st, chunk=chunk,
+                                          valid=valid)
                 return out, new_st
 
             if remat:
@@ -480,7 +521,8 @@ def _trunk(cfg, params, x, *, states=None, chunk=None, remat=False):
             new_states["mlstm_runs"].append(None)
         if ri < len(runs) - 1:
             s_state = states["slstm"][ri] if states is not None else None
-            x, new_s = slstm_block(cfg, params["slstm"][ri], x, state=s_state)
+            x, new_s = slstm_block(cfg, params["slstm"][ri], x, state=s_state,
+                                   valid=valid)
             new_states["slstm"].append(new_s)
     return x, new_states
 
@@ -547,9 +589,13 @@ def prefill_chunk(cfg, params, batch, carry, offset):
     """One chunk of a state-carrying prefill.  The recurrent state is
     positionless, so ``offset`` is unused — chaining is pure state
     threading (this was already exact pre-refactor; the chunk-carry
-    protocol just gives it the uniform serving signature)."""
+    protocol just gives it the uniform serving signature).
+    batch["valid"] (M,B,C) marks the junk suffix of a padded final chunk
+    (tail folding): junk steps are gate-neutral in every cell, so the
+    carried state equals the exact-length pass."""
     x = L.embed(batch["tokens"], params["embed"], jnp.dtype(cfg.dtype))
-    _, states = _trunk(cfg, params, x, states=carry["cache"])
+    _, states = _trunk(cfg, params, x, states=carry["cache"],
+                       valid=batch.get("valid"))
     return {"cache": states}
 
 

@@ -130,7 +130,8 @@ def prefill_chunk(cfg, params, batch, carry, offset):
     idx = jnp.clip(positions, 0, p - 1)[..., None]
     img_x = jnp.take_along_axis(img, jnp.broadcast_to(idx, idx.shape[:3] + (img.shape[-1],)), axis=2)
     x = jnp.where((positions < p)[..., None], img_x.astype(tok_x.dtype), tok_x)
-    return dense._prefill_chunk_embeds(cfg, params, x, carry, offset)
+    return dense._prefill_chunk_embeds(cfg, params, x, carry, offset,
+                                       valid=batch.get("valid"))
 
 
 decode_step = dense.decode_step

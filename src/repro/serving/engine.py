@@ -9,11 +9,13 @@ of per-slot decode state and composes four subsystems:
   tasks have different input streams — paper §2.1),
 * ``prefill.py`` — the unified chunked-prefill runtime: every prompt
   (any family, any length) streams through the family's chainable
-  ``api.prefill_chunk`` in fixed-size chunks — two compiled shapes per
-  family total — with up to ``prefill_lanes`` requests sharing one
-  carry tree via an on-device weight-row gather.  The engine grants the
-  runtime a per-step ``chunk_budget``, so prefill work interleaves with
-  decode steps instead of stalling the grid while a long prompt admits,
+  ``api.prefill_chunk`` in fixed-size chunks — ONE compiled shape per
+  family (the final partial chunk is padded and masked per position:
+  tail folding, DESIGN.md §6.3) — with up to ``prefill_lanes`` requests
+  sharing one donated carry tree via an on-device weight-row gather.
+  The engine grants the runtime a per-step ``chunk_budget``, so prefill
+  work interleaves with decode steps instead of stalling the grid while
+  a long prompt admits,
 * ``sampling.py`` — greedy/temperature/top-k sampling over the whole
   (M, B) logits grid, fused into the SAME jitted program as the decode
   step: an engine step is exactly ONE device call, with zero per-slot
@@ -78,6 +80,8 @@ class MultiModelServer:
         prefill_chunk: int = 32,
         prefill_lanes: int = 4,
         chunk_budget: int = 4,
+        tail_fold: bool = True,
+        donate: bool | None = None,
         mesh=None,
         rules=None,
     ):
@@ -108,6 +112,7 @@ class MultiModelServer:
             cfg, max_context=max_context, chunk=prefill_chunk,
             lanes=prefill_lanes, metrics=self.metrics,
             mesh=mesh, rules=self.rules,
+            tail_fold=tail_fold, donate=donate,
         )
         self.chunk_budget = max(1, chunk_budget)
 
@@ -163,8 +168,10 @@ class MultiModelServer:
 
         # donate the grid cache so decode/scatter update in place instead
         # of copying the whole (M, B, max_context) grid (skipped on CPU,
-        # where XLA can't honor it and jit warns)
-        donate = jax.default_backend() != "cpu"
+        # where XLA can't honor it and jit warns; ``donate=`` overrides —
+        # the donation-parity tests force it on to prove the donated
+        # program never reads an invalidated buffer)
+        donate = self.prefill.donate
         self._step = jax.jit(_step_impl, donate_argnums=(1,) if donate else ())
         self._scatter = jax.jit(
             lambda grid, src, i, mm, bb: api.put_state(

@@ -39,6 +39,9 @@ class ServerMetrics:
         self.decode_steps = 0        # fused (M, B)-grid decode+sample calls
         self.prefill_batches = 0     # chunk/tail prefill device calls
         self.prefill_requests = 0    # lane-steps served by them
+        self.prefill_tokens = 0      # real (non-padded) positions prefilled
+        self.prefill_wall_s = 0.0    # settled wall time inside advance()
+        self.admitted = 0            # requests bound to a prefill lane
         # wall time decode-ready slots sat idle while admission chunks
         # ran — what the engine's chunk_budget bounds per step
         self.admission_stall_s = 0.0
@@ -61,10 +64,15 @@ class ServerMetrics:
         st.admitted += 1
         st.queue_depth -= 1
         st.prompt_tokens += prompt_len
+        self.admitted += 1
 
-    def note_prefill_batch(self, num_requests: int) -> None:
+    def note_prefill_batch(self, num_requests: int, num_tokens: int = 0) -> None:
         self.prefill_batches += 1
         self.prefill_requests += num_requests
+        self.prefill_tokens += num_tokens
+
+    def note_prefill_wall(self, seconds: float) -> None:
+        self.prefill_wall_s += seconds
 
     def note_decode_step(self) -> None:
         self.decode_steps += 1
@@ -104,11 +112,25 @@ class ServerMetrics:
                 "mean_latency_s": st.latency_sum / st.latency_n if st.latency_n else None,
             })
         gen = sum(s.generated_tokens for s in self.per_instance)
+        # split throughput: prefill rate over the settled admission wall
+        # time, decode rate over the remainder — the two phases interleave
+        # inside one step loop, so the denominators partition wall_s
+        decode_wall = max(dt - self.prefill_wall_s, 1e-9)
         out = {
             "wall_s": dt,
             "decode_steps": self.decode_steps,
             "prefill_batches": self.prefill_batches,
             "prefill_requests": self.prefill_requests,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_wall_s": self.prefill_wall_s,
+            "prefill_tok_per_s": (
+                self.prefill_tokens / self.prefill_wall_s
+                if self.prefill_wall_s > 0 else 0.0
+            ),
+            "decode_tok_per_s": gen / decode_wall,
+            "device_calls_per_admission": (
+                self.prefill_batches / self.admitted if self.admitted else 0.0
+            ),
             "admission_stall_ms": 1e3 * self.admission_stall_s,
             "generated_tokens": gen,
             "tok_per_s": gen / dt,
@@ -141,7 +163,10 @@ class ServerMetrics:
             f"total: {snap['generated_tokens']} tokens in {snap['wall_s']:.2f}s "
             f"({snap['tok_per_s']:.1f} tok/s) — {snap['decode_steps']} fused decode "
             f"steps, {snap['prefill_batches']} prefill chunk calls "
-            f"({snap['prefill_requests']} lane-steps), "
+            f"({snap['prefill_requests']} lane-steps, "
+            f"{snap['device_calls_per_admission']:.2f} calls/admission), "
+            f"prefill {snap['prefill_tok_per_s']:.1f} tok/s / "
+            f"decode {snap['decode_tok_per_s']:.1f} tok/s, "
             f"{snap['admission_stall_ms']:.1f} ms admission stall"
         )
         return "\n".join(rows)

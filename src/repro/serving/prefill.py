@@ -8,9 +8,12 @@ caveat.  This runtime replaces all of them: every prompt — dense, moe,
 vlm, audio, ssm AND hybrid — streams through the family's chainable
 ``api.prefill_chunk`` (DESIGN.md §6.2) in fixed-size chunks, so
 
-* admission compiles exactly TWO shapes per family — the chunk and the
-  single-token tail — regardless of how many distinct prompt lengths
-  arrive (``compiled_shapes`` asserts this in tests),
+* admission compiles exactly ONE shape per family — the chunk; the old
+  single-token tail loop is folded into one padded final chunk with
+  per-position validity masks (``tail_fold``), so a mixed-length lane
+  batch drains in ``ceil(L_max/chunk)`` device calls with zero
+  per-token tail calls (``compiled_shapes``/``device_calls`` assert
+  this in tests),
 * up to ``lanes`` requests prefill together in ONE carry tree, each
   riding the instances axis of the merged program via an on-device
   weight-row gather (``gather_instances``); per-lane traced offsets let
@@ -34,6 +37,7 @@ tree and scattered into their grid slots.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import numpy as np
@@ -90,6 +94,8 @@ class ChunkedPrefill:
         metrics=None,
         mesh=None,
         rules=None,
+        tail_fold: bool = True,
+        donate: bool | None = None,
     ):
         if cfg.family not in SERVABLE:
             raise ValueError(f"family {cfg.family!r} is not servable")
@@ -98,6 +104,17 @@ class ChunkedPrefill:
         self.max_context = max_context
         self.metrics = metrics
         self.lanes = max(1, lanes)
+        # tail folding: pad the final chunk to the full chunk width with
+        # per-position validity masks instead of issuing up to chunk-1
+        # single-token tail calls — ONE compiled shape, ceil(L/chunk)
+        # device calls per admission (off = the two-shape chunk+tail path,
+        # kept for A/B benchmarking)
+        self.tail_fold = tail_fold
+        # donate the lane carry through the jitted chunk step so chunk
+        # calls update the carry buffers in place instead of materializing
+        # a second copy per call (mirrors engine.py's grid-cache donation;
+        # skipped on CPU, where XLA can't honor it and jit warns)
+        self.donate = (jax.default_backend() != "cpu") if donate is None else donate
         # a chunk must map to distinct cache slots, so clamp it to the
         # narrowest ring the family keeps (hybrid SWA ring / sliding
         # window); full-context caches don't wrap during prefill
@@ -123,12 +140,22 @@ class ChunkedPrefill:
                 tree_shardings(self.rules, self._carry_axes, self._carry),
             )
         # pristine carry for zero-work completions (single-token prompts
-        # of prefix-less families scatter fresh init state, no device call)
-        self._zero_carry = self._carry
+        # of prefix-less families scatter fresh init state, no device
+        # call).  A deep copy, NOT an alias: the chunk step donates the
+        # live carry, which would invalidate an aliased zero carry
+        self._zero_carry = jax.tree.map(jnp.copy, self._carry)
+        if mesh is not None:
+            from repro.launch.shardings import tree_shardings
+            self._zero_carry = jax.device_put(
+                self._zero_carry,
+                tree_shardings(self.rules, self._carry_axes, self._zero_carry),
+            )
         self._lanes = [_Lane() for _ in range(self.lanes)]
         self._fns: dict[int, Any] = {}      # chunk width -> jitted step
         self._static = self._static_inputs()
         self._tail_turn = False             # chunk/tail round alternation
+        self.device_calls = 0               # total chunk/tail device calls
+        self.admitted = 0                   # lanes ever started
 
     # -- geometry ------------------------------------------------------------
 
@@ -152,7 +179,8 @@ class ChunkedPrefill:
 
     @property
     def compiled_shapes(self) -> int:
-        """Distinct compiled prefill shapes — at most 2 (chunk + tail)."""
+        """Distinct compiled prefill shapes — 1 with tail folding (the
+        chunk), at most 2 without (chunk + single-token tail)."""
         return len(self._fns)
 
     # -- lane bookkeeping ----------------------------------------------------
@@ -172,6 +200,7 @@ class ChunkedPrefill:
                 lane.next_pos = 0
                 lane.total = self.prefix + len(req.prompt) - 1
                 lane.fresh = True
+                self.admitted += 1
                 return
         raise RuntimeError("no free prefill lane")
 
@@ -201,15 +230,22 @@ class ChunkedPrefill:
                 new = C.tree_select_lanes(valid, new, carry, self._carry_axes)
                 return constrain_tree(new, self._carry_axes)
 
-            self._fns[c] = jax.jit(fn)
+            # donate the carry (arg 3): the chunk step then updates the
+            # lane caches in place instead of allocating a full second
+            # copy of the (lanes, 1, max_context) tree per call
+            self._fns[c] = jax.jit(
+                fn, donate_argnums=(3,) if self.donate else ()
+            )
         return self._fns[c]
 
     # -- the chunk pump ------------------------------------------------------
 
     def advance(self, params, budget: int) -> list[tuple[Request, PrefillOut]]:
-        """Run up to ``budget`` chunk/tail device calls; return the
-        requests whose prefill completed (with their PrefillOut rows of
-        the shared carry tree, to be scattered before the next advance)."""
+        """Run up to ``budget`` chunk device calls; return the requests
+        whose prefill completed (with their PrefillOut rows of the shared
+        carry tree).  Under donation the returned rows alias the live
+        carry, which the NEXT advance updates in place — consume (scatter)
+        them before advancing again, as the engine does."""
         done: list[tuple[Request, PrefillOut]] = []
         # zero-work lanes (single-token prompts of prefix-less families)
         # complete immediately from the pristine init carry — their grid
@@ -223,26 +259,38 @@ class ChunkedPrefill:
                 )))
                 lane.req = None
         stepped = False
+        t0 = time.perf_counter()
         with mesh_context(self.mesh, self.rules):
             while budget > 0:
                 busy = [i for i, l in enumerate(self._lanes) if l.req is not None]
                 if not busy:
                     break
-                chunkable = [i for i in busy
-                             if self._lanes[i].total - self._lanes[i].next_pos >= self.chunk]
-                tailable = [i for i in busy
-                            if 0 < self._lanes[i].total - self._lanes[i].next_pos < self.chunk]
-                if not chunkable and not tailable:
-                    break
-                # alternate chunk and tail rounds when both kinds of work
-                # exist: under continuous long-prompt arrivals a lane one
-                # token from completion must not be starved behind lanes
-                # that always have a full chunk left
-                run_tail = bool(tailable) and (self._tail_turn or not chunkable)
-                self._tail_turn = not run_tail
-                workable = tailable if run_tail else chunkable
-                c = 1 if run_tail else self.chunk
-                self._step(params, workable, c)
+                if self.tail_fold:
+                    # folded: EVERY lane with work advances together; a
+                    # lane with < chunk left rides a padded final chunk
+                    # whose junk suffix is masked per position — one
+                    # compiled shape, ceil(L_max/chunk) calls total
+                    workable = [i for i in busy
+                                if self._lanes[i].total > self._lanes[i].next_pos]
+                    if not workable:
+                        break
+                    self._step(params, workable, self.chunk, fold=True)
+                else:
+                    chunkable = [i for i in busy
+                                 if self._lanes[i].total - self._lanes[i].next_pos >= self.chunk]
+                    tailable = [i for i in busy
+                                if 0 < self._lanes[i].total - self._lanes[i].next_pos < self.chunk]
+                    if not chunkable and not tailable:
+                        break
+                    # alternate chunk and tail rounds when both kinds of
+                    # work exist: under continuous long-prompt arrivals a
+                    # lane one token from completion must not be starved
+                    # behind lanes that always have a full chunk left
+                    run_tail = bool(tailable) and (self._tail_turn or not chunkable)
+                    self._tail_turn = not run_tail
+                    workable = tailable if run_tail else chunkable
+                    c = 1 if run_tail else self.chunk
+                    self._step(params, workable, c)
                 stepped = True
                 budget -= 1
                 for i in busy:
@@ -258,17 +306,21 @@ class ChunkedPrefill:
             # timer measures device execution, not just dispatch (the
             # scatter/decode it times against depend on this carry anyway)
             jax.block_until_ready(self._carry)
+            if self.metrics is not None:
+                self.metrics.note_prefill_wall(time.perf_counter() - t0)
         for _, out in done:
             out.cache = self._carry["cache"]
         return zero_done + done
 
-    def _step(self, params, workable: list[int], c: int) -> None:
+    def _step(self, params, workable: list[int], c: int, fold: bool = False) -> None:
         k = self.lanes
         toks = np.zeros((k, 1, c), np.int32)
         inst = np.zeros((k,), np.int32)
         offset = np.zeros((k, 1), np.int32)
         valid = np.zeros((k,), bool)
         fresh = np.zeros((k,), bool)
+        pvalid = np.zeros((k, 1, c), bool)
+        tokens_done = 0
         for i, lane in enumerate(self._lanes):
             if lane.req is None:
                 continue
@@ -278,12 +330,19 @@ class ChunkedPrefill:
             lane.fresh = False
             if i in workable:
                 valid[i] = True
-                for j in range(c):
+                # folded final chunks advance only their real remainder;
+                # the junk suffix (token 0) is masked per position
+                adv = min(c, lane.total - lane.next_pos) if fold else c
+                pvalid[i, 0, :adv] = True
+                for j in range(adv):
                     p = lane.next_pos + j
                     if p >= self.prefix:
                         toks[i, 0, j] = lane.req.prompt[p - self.prefix]
-                lane.next_pos += c
+                lane.next_pos += adv
+                tokens_done += adv
         extras = {}
+        if fold:
+            extras["valid"] = jnp.asarray(pvalid)
         if self.family == "moe":
             from repro.models import moe
             limit = np.zeros((k, 1), np.int32)
@@ -295,15 +354,21 @@ class ChunkedPrefill:
             params, jnp.asarray(inst), jnp.asarray(toks), self._carry,
             jnp.asarray(offset), jnp.asarray(valid), jnp.asarray(fresh), extras,
         )
+        self.device_calls += 1
         if self.metrics is not None:
-            self.metrics.note_prefill_batch(len(workable))
+            self.metrics.note_prefill_batch(len(workable), tokens_done)
 
     # -- convenience (tests / non-interleaved callers) -----------------------
 
     def run(self, params, reqs) -> list[PrefillOut]:
         """Prefill the given requests to completion (no interleaving);
         one PrefillOut per request, in submission order.  Requests are
-        fed through the lanes in waves of ``self.lanes``."""
+        fed through the lanes in waves of ``self.lanes``.
+
+        Under donation a returned carry is only valid until the next
+        ``advance`` (which updates it in place) — the engine scatters
+        each wave immediately; here later waves would invalidate earlier
+        rows, so donated multi-wave runs snapshot each wave's cache."""
         outs: dict[int, PrefillOut] = {}
         pending = list(enumerate(reqs))
         started: dict[int, int] = {}      # id(req) -> original index
@@ -312,6 +377,14 @@ class ChunkedPrefill:
                 i, r = pending.pop(0)
                 started[id(r)] = i
                 self.start(r)
-            for req, out in self.advance(params, budget=1_000_000):
+            wave = self.advance(params, budget=1_000_000)
+            if self.donate and (pending or self.in_flight()):
+                snap = None
+                for _, out in wave:
+                    if out.cache is self._carry["cache"]:
+                        if snap is None:
+                            snap = jax.tree.map(jnp.copy, out.cache)
+                        out.cache = snap
+            for req, out in wave:
                 outs[started[id(req)]] = out
         return [outs[i] for i in range(len(reqs))]

@@ -367,3 +367,73 @@ def test_xlstm_forward_pallas_flag_matches_reference():
     y_pl = ssm.forward(cfg.with_(use_pallas_kernels=True), params, toks)
     np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunk_prefill_attention — chunked-prefill flash attention over a cache
+# (decode_attention extended from q-len 1 to q-len C; serving tail folding)
+# ---------------------------------------------------------------------------
+
+# (m, b, c, h, kvh, s_cache, hd, pin, window, sink)
+CHUNK_ATTN_CASES = [
+    (2, 1, 8, 4, 2, 16, 8, 0, 0, 0),      # GQA, full cache, mid-prompt
+    (1, 2, 4, 4, 4, 24, 8, 0, 6, 0),      # MHA, sliding window, ring wrap
+    (2, 1, 8, 8, 2, 20, 16, 4, 8, 4),     # pinned prefix + sink (hybrid SWA)
+    (1, 1, 5, 3, 1, 13, 8, 0, 0, 0),      # MQA, ragged everything
+]
+
+
+@pytest.mark.parametrize("m,b,c,h,kvh,sc,hd,pin,win,sink", CHUNK_ATTN_CASES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_chunk_prefill_attention_sweep(m, b, c, h, kvh, sc, hd, pin, win, sink, dt):
+    """GQA parity vs the pure-jnp oracle across cache layouts: plain ring,
+    wrapped ring, pinned-prefix (meta-token) ring with attention sink."""
+    from repro.kernels.chunk_prefill_attn import chunk_prefill_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = jax.random.normal(ks[0], (m, b, c, h, hd), dt)
+    k = jax.random.normal(ks[1], (m, b, sc + c, kvh, hd), dt)
+    v = jax.random.normal(ks[2], (m, b, sc + c, kvh, hd), dt)
+    # offsets straddle empty / mid-fill / wrapped cache states per lane
+    offset = jax.random.randint(ks[3], (m, b), max(pin, 1), sc + 5)
+    got = chunk_prefill_attention(
+        q, k, v, offset, s_cache=sc, pin=pin, window=win, sink=sink, block_s=8)
+    want = ref.chunk_prefill_attention(
+        q, k, v, offset, s_cache=sc, pin=pin, window=win, sink=sink)
+    _cmp(got, want, dt)
+
+
+def test_chunk_prefill_attention_matches_model_flash_path():
+    """Kernel agrees with the model zoo's flash_attention chunk path (the
+    XLA formulation it replaces in dense._prefill_chunk_embeds): same
+    [cache-before, chunk] stream, positions from cache_positions_after."""
+    from repro.kernels.chunk_prefill_attn import chunk_prefill_attention
+    from repro.models import layers as L
+
+    m, b, c, h, kvh, sc, hd = 2, 1, 6, 4, 2, 18, 16
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (m, b, c, h, hd))
+    k = jax.random.normal(ks[1], (m, b, sc + c, kvh, hd))
+    v = jax.random.normal(ks[2], (m, b, sc + c, kvh, hd))
+    offset = jnp.array([[4], [21]], jnp.int32)        # pre-wrap and wrapped
+    got = chunk_prefill_attention(q, k, v, offset, s_cache=sc, window=8,
+                                  block_s=8)
+    positions = offset[..., None] + jnp.arange(c, dtype=jnp.int32)
+    kv_pos = jnp.concatenate(
+        [L.cache_positions_after(offset - 1, sc, 0), positions], axis=-1)
+    want = L.flash_attention(q, k, v, positions, kv_pos, window=8, kv_chunk=8)
+    _cmp(got, want, jnp.float32)
+
+
+def test_chunk_prefill_ops_dispatch():
+    from repro.kernels.chunk_prefill_attn import chunk_prefill_attention  # noqa: F401
+
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (1, 2, 4, 4, 8))
+    k = jax.random.normal(ks[1], (1, 2, 16 + 4, 2, 8))
+    v = jax.random.normal(ks[2], (1, 2, 16 + 4, 2, 8))
+    offset = jnp.array([[3, 9]], jnp.int32)
+    got = ops.chunk_prefill_attention(q, k, v, offset, s_cache=16)
+    want = ops.chunk_prefill_attention(q, k, v, offset, s_cache=16,
+                                       use_pallas=False)
+    _cmp(got, want, jnp.float32)

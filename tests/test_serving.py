@@ -152,7 +152,7 @@ def test_chunked_prefill_matches_per_request_prefill():
     prompts = [(0, [5, 6, 7]), (2, [9, 8, 7, 6, 5, 4]), (1, [3])]
     reqs = [_req(i, p) for i, p in prompts]
     outs = cp.run(params, reqs)
-    assert cp.compiled_shapes <= 2      # chunk + tail, for all three lengths
+    assert cp.compiled_shapes == 1      # one folded chunk shape, all lengths
 
     ax = api.axes(cfg)
     for req, out in zip(reqs, outs):
@@ -171,15 +171,15 @@ def test_chunked_prefill_matches_per_request_prefill():
         assert out.last_token == req.prompt[-1]
 
 
-def test_prefill_compiles_bounded_chunk_plus_tail():
+def test_prefill_compiles_bounded_single_shape():
     cfg = registry.get_smoke_config("tinyllama-1.1b").with_(num_instances=2)
     params = api.init(cfg, jax.random.PRNGKey(0))
     cp = ChunkedPrefill(cfg, max_context=64, chunk=4, lanes=2)
-    # 7 distinct prompt lengths -> exactly two shapes (chunk + tail),
-    # never a per-length compile
+    # 7 distinct prompt lengths -> exactly ONE shape (the folded chunk;
+    # tails ride padded final chunks), never a per-length compile
     for l in (1, 2, 3, 5, 9, 13, 21):
         cp.run(params, [_req(0, list(range(1, l + 1)))])
-    assert cp.compiled_shapes <= 2
+    assert cp.compiled_shapes == 1
 
 
 # ---------------------------------------------------------------------------

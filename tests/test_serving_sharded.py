@@ -195,6 +195,23 @@ def test_kernels_under_shard_map_match_plain():
                                        kv_len, rules=rules, interpret=True)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-5, atol=2e-5)
+
+        # chunk-prefill flash attention (q-len C over [cache, chunk]),
+        # kv-head groups over "model", lane offsets replicated per rank
+        from repro.kernels.chunk_prefill_attn import (
+            chunk_prefill_attention, chunk_prefill_attention_sharded)
+        c, sc = 6, 26
+        qc = jax.random.normal(jax.random.PRNGKey(6), (2, 4, c, 8, 16))
+        kc = jax.random.normal(jax.random.PRNGKey(7), (2, 4, sc + c, 4, 16))
+        vc = jax.random.normal(jax.random.PRNGKey(8), (2, 4, sc + c, 4, 16))
+        off = jax.random.randint(jax.random.PRNGKey(9), (2, 4), 0, sc)
+        ref = chunk_prefill_attention(qc, kc, vc, off, s_cache=sc, window=8,
+                                      interpret=True)
+        out = chunk_prefill_attention_sharded(qc, kc, vc, off, rules=rules,
+                                              s_cache=sc, window=8,
+                                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
         print("sharded kernels OK")
         """
     )
