@@ -1,5 +1,5 @@
 """Serving benchmark: fused (M, B)-grid serving vs M sequential servers,
-plus the tail-folding admission A/B.
+the tail-folding admission A/B, and an open-loop async load generator.
 
 The paper's headline claim restated at the serving-system level: one
 NetFuse-merged `MultiModelServer` over M instances vs M single-model
@@ -21,10 +21,22 @@ DxT``, default all-data); the JSON record then carries the mesh shape,
 per-device throughput, and the tail-folding A/B on BOTH the no-mesh and
 the mesh path.  Every throughput field is validated finite before the
 record is written — a missing/NaN figure fails the run (CI bench-smoke).
+
+Load generator (``--clients N --arrival-rate R``): an OPEN-loop arrival
+process — request arrival times are drawn up front from an exponential
+inter-arrival distribution at R req/s and split round-robin over N
+async client tasks, each of which fires its submissions at the
+scheduled instants regardless of completions (consumers are spawned,
+not awaited), so queueing delay shows up in the tails instead of
+throttling the offered load.  The run streams through the
+``AsyncEngine`` frontend and contributes per-instance TTFT and
+inter-token-latency p50/p95/p99 to the record (``load_gen`` section) —
+validated finite like every other throughput field.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import sys
 import time
@@ -112,12 +124,7 @@ def _fold_ab(cfg, merged, mesh, args, reqs) -> dict:
     excluded from the timed pass."""
     out = {}
     for key, fold in (("fold_off", False), ("fold_on", True)):
-        server = MultiModelServer(
-            cfg, merged, slots_per_instance=args.slots,
-            max_context=args.resolved_max_context, temperature=0.0, mesh=mesh,
-            prefill_chunk=args.chunk, chunk_budget=args.chunk_budget,
-            prefill_lanes=args.lanes, tail_fold=fold,
-        )
+        server = _mk_server(cfg, merged, mesh, args, tail_fold=fold)
         mk = lambda: [Request(r.instance, list(r.prompt), r.max_new_tokens)
                       for r in reqs]
         _timed_pass(server, mk())          # compile warmup
@@ -133,8 +140,100 @@ def _fold_ab(cfg, merged, mesh, args, reqs) -> dict:
     return out
 
 
+def _mk_server(cfg, merged, mesh, args, **overrides) -> MultiModelServer:
+    """The ONE construction point for every benchmark pass (fused,
+    fold A/B, load gen), so admission knobs can't silently diverge
+    between the variants under comparison."""
+    kw = dict(
+        slots_per_instance=args.slots,
+        max_context=args.resolved_max_context, temperature=0.0, mesh=mesh,
+        prefill_chunk=args.chunk, chunk_budget=args.chunk_budget,
+        prefill_lanes=args.lanes,
+    )
+    kw.update(overrides)
+    return MultiModelServer(cfg, merged, **kw)
+
+
+def _run_load_gen(cfg, merged, mesh, args, reqs) -> dict:
+    """Open-loop load generation through the AsyncEngine: pre-drawn
+    exponential arrivals at ``--arrival-rate`` req/s, round-robin over
+    ``--clients`` concurrent client tasks; consumers are fire-and-forget
+    so arrivals never wait on completions."""
+    from repro.serving.frontend import AsyncEngine
+
+    server = _mk_server(cfg, merged, mesh, args)
+    # compile warmup outside the timed/streamed pass; fresh metrics after,
+    # so the recorded percentiles carry no compile-time TTFT outlier
+    server.submit(Request(0, list(reqs[0].prompt), reqs[0].max_new_tokens))
+    server.run_until_drained()
+    server.reset_metrics()
+
+    rng = np.random.default_rng(args.seed + 1)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                         size=len(reqs)))
+
+    async def run() -> list:
+        engine = AsyncEngine(server)
+        results: list = []
+        consumers: list[asyncio.Task] = []
+        t0 = asyncio.get_running_loop().time()
+
+        async def fire(j: int):
+            # submit() resolves only when the driver applies the command
+            # between steps — keep even that wait off the arrival clock
+            # (submit_time is stamped at this call, so the recorded TTFT
+            # still counts it)
+            stream = await engine.submit(Request(
+                reqs[j].instance, list(reqs[j].prompt),
+                reqs[j].max_new_tokens,
+            ))
+            async for _tok in stream:
+                pass
+            results.append(await stream.result())
+
+        async def client(worker: int):
+            # each client owns every worker-th arrival of the shared
+            # open-loop schedule and fires it at its scheduled instant
+            loop = asyncio.get_running_loop()
+            for j in range(worker, len(reqs), args.clients):
+                delay = t0 + arrivals[j] - loop.time()
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                consumers.append(asyncio.ensure_future(fire(j)))
+
+        await asyncio.gather(*(client(w) for w in range(args.clients)))
+        await asyncio.gather(*consumers)
+        await engine.aclose()
+        return results
+
+    t0 = time.perf_counter()
+    results = asyncio.run(run())
+    wall = time.perf_counter() - t0
+    gen = sum(len(r.tokens) for r in results if r.status == "ok")
+    snap = server.metrics.snapshot()
+    return {
+        "clients": args.clients,
+        "arrival_rate": args.arrival_rate,
+        "requests": len(results),
+        "completed": sum(1 for r in results if r.status == "ok"),
+        "tokens": gen,
+        "wall_s": wall,
+        "tok_per_s": gen / wall,
+        "decode_steps": snap["decode_steps"],
+        "ttft_ms": snap["ttft_ms"],
+        "itl_ms": snap["itl_ms"],
+        "per_instance": [
+            {"ttft_ms": inst["ttft_ms"], "itl_ms": inst["itl_ms"],
+             "completed": inst["completed"],
+             "generated_tokens": inst["generated_tokens"]}
+            for inst in snap["instances"]
+        ],
+    }
+
+
 _THROUGHPUT_FIELDS = ("tok_per_s", "prefill_tok_per_s", "decode_tok_per_s",
                       "device_calls_per_admission")
+_PCT_KEYS = ("p50", "p95", "p99")
 
 
 def validate_record(record: dict) -> None:
@@ -149,6 +248,13 @@ def validate_record(record: dict) -> None:
             assert isinstance(v, (int, float)) and _math.isfinite(v), (
                 f"{where}: {f} is not finite: {v!r}")
 
+    def check_pct(d, where: str):
+        assert d is not None, f"{where}: missing percentiles"
+        for k in _PCT_KEYS:
+            v = d.get(k)
+            assert isinstance(v, (int, float)) and _math.isfinite(v), (
+                f"{where}: {k} is not finite: {v!r}")
+
     for side in ("fused", "sequential"):
         v = record[side]
         assert _math.isfinite(v["tok_per_s"]), (side, v["tok_per_s"])
@@ -157,6 +263,22 @@ def validate_record(record: dict) -> None:
             continue
         for key in ("fold_off", "fold_on"):
             check(ab[key], f"tail_folding.{mesh_key}.{key}")
+    lg = record["load_gen"]
+    if lg is not None:
+        assert _math.isfinite(lg["tok_per_s"]), lg["tok_per_s"]
+        if lg["completed"]:
+            check_pct(lg["ttft_ms"], "load_gen.ttft_ms")
+            # ITL needs a request with a second token (e.g. --max-new 1
+            # legitimately yields no inter-token gaps)
+            if lg["tokens"] > lg["completed"]:
+                check_pct(lg["itl_ms"], "load_gen.itl_ms")
+        for i, inst in enumerate(lg["per_instance"]):
+            # every instance the generator touched must carry finite tails
+            if inst["completed"]:
+                check_pct(inst["ttft_ms"], f"load_gen.per_instance[{i}].ttft_ms")
+                if inst["generated_tokens"] > inst["completed"]:
+                    check_pct(inst["itl_ms"],
+                              f"load_gen.per_instance[{i}].itl_ms")
 
 
 def main():
@@ -182,6 +304,12 @@ def main():
     ap.add_argument("--lanes", type=int, default=4,
                     help="concurrent prefill lanes (requests mid-admission)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent async client tasks in the open-loop "
+                         "load-generator pass (0 disables the pass)")
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="open-loop arrival rate in requests/s (exponential "
+                         "inter-arrivals, split over --clients)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host-platform devices and serve sharded")
     ap.add_argument("--mesh-shape", default=None, metavar="DxT",
@@ -216,12 +344,7 @@ def main():
     # the timed pass), so neither side pays compile time in the record —
     # the delta under test is steady-state dispatch/batching, as in the
     # paper's measurement
-    fused_server = MultiModelServer(
-        cfg, merged, slots_per_instance=args.slots,
-        max_context=max_context, temperature=0.0, mesh=mesh,
-        prefill_chunk=args.chunk, chunk_budget=args.chunk_budget,
-        prefill_lanes=args.lanes,
-    )
+    fused_server = _mk_server(cfg, merged, mesh, args)
 
     def fused_run():
         steps0 = fused_server.steps
@@ -273,6 +396,13 @@ def main():
         _fold_ab(cfg, merged, mesh, args, reqs) if mesh is not None else None
     )
 
+    # open-loop async load generation through the streaming frontend:
+    # the section the TTFT/ITL tail-latency trajectory is tracked on
+    load_gen = (
+        _run_load_gen(cfg, merged, mesh, args, reqs)
+        if args.clients > 0 else None
+    )
+
     num_devices = fused_server.metrics.num_devices
     record = {
         "bench": "serve_fused_vs_sequential",
@@ -294,6 +424,7 @@ def main():
         "fused": fused,
         "sequential": seq,
         "tail_folding": tail_folding,
+        "load_gen": load_gen,
         # only a measured figure when actually serving sharded
         "fused_tok_per_s_per_device": (
             fused["tok_per_s"] / num_devices if mesh is not None else None

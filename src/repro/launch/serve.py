@@ -14,10 +14,18 @@ Mesh-parametric serving: ``--devices N`` forces N host-platform devices
 (must be consumed before jax initializes) and ``--mesh-shape DxT``
 serves the (M, B) grid under a (data=D, model=T) mesh — slot surgery,
 prefill, decode and sampling all run sharded (engine ``mesh=``).
+
+Async frontend (DESIGN.md §6.4): ``--stream`` drives the same synthetic
+workload through the ``AsyncEngine`` as concurrent clients, printing
+tokens as each fused step lands; ``--http PORT`` serves the engine over
+HTTP (OpenAI-style ``POST /v1/completions`` with SSE streaming, ``GET
+/metrics``) until interrupted, then drains gracefully and prints the
+metrics table (now including TTFT/ITL p50/p95/p99 tails).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import sys
 import time
 
@@ -35,6 +43,54 @@ from repro.configs import registry
 from repro.models import common as C
 from repro.serving import MultiModelServer, Request, SERVABLE_FAMILIES
 from repro.serving.scheduler import POLICIES
+
+
+async def _stream_clients(server, reqs, max_queue):
+    """The --stream path: one async client per request, tokens printed
+    as each fused engine step lands (the sync path's streams are
+    bit-identical under greedy sampling)."""
+    from repro.serving import AsyncEngine
+
+    engine = AsyncEngine(server, max_queue_depth=max_queue)
+
+    async def client(r):
+        stream = await engine.submit(r)
+        async for tok in stream:
+            print(f"  req {stream.request_id:>3} inst {r.instance} +{tok}")
+        return await stream.result()
+
+    results = await asyncio.gather(*(client(r) for r in reqs))
+    await engine.aclose()
+    return [r for r in results if r.status == "ok"]
+
+
+def _serve_http(server, args):
+    """The --http path: expose the engine over HTTP until interrupted,
+    then drain in-flight requests and print the metrics table."""
+    from repro.serving import AsyncEngine, start_http_server
+
+    async def run():
+        engine = AsyncEngine(server, max_queue_depth=args.max_queue)
+        http = await start_http_server(engine, port=args.http)
+        addr = http.sockets[0].getsockname()
+        print(f"serving HTTP on {addr[0]}:{addr[1]} — "
+              f"POST /v1/completions (model-0..model-{server.m - 1}, "
+              f"prompt = token ids, \"stream\": true for SSE), GET /metrics")
+        try:
+            async with http:
+                await http.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            http.close()
+            await http.wait_closed()
+            await engine.aclose()          # graceful drain
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    print(server.metrics.format_table())
 
 
 def main():
@@ -64,6 +120,15 @@ def main():
     ap.add_argument("--mesh-shape", default=None, metavar="DxT",
                     help="serve under a (data=D, model=T) mesh, e.g. 2x4; "
                          "default with --devices: all devices on data")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the workload through the AsyncEngine as "
+                         "concurrent clients, printing tokens as they arrive")
+    ap.add_argument("--http", type=int, default=0, metavar="PORT",
+                    help="serve over HTTP on this port (POST /v1/completions "
+                         "SSE + GET /metrics) until interrupted")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="per-instance queue bound for the async frontend "
+                         "(0 = unbounded); full queues answer HTTP 429")
     args = ap.parse_args()
 
     base = registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
@@ -102,12 +167,27 @@ def main():
         prefill_lanes=args.lanes, chunk_budget=args.chunk_budget,
         tail_fold=not args.no_tail_fold, mesh=mesh,
     )
+    if args.http:
+        _serve_http(server, args)
+        return
+
     rng = np.random.default_rng(args.seed)
+    reqs = [
+        Request(
+            instance=i % m,
+            prompt=rng.integers(1, cfg.vocab_size,
+                                size=rng.integers(2, 8)).tolist(),
+            max_new_tokens=args.max_new,
+        )
+        for i in range(args.requests)
+    ]
     t0 = time.perf_counter()
-    for i in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(2, 8)).tolist()
-        server.submit(Request(instance=i % m, prompt=prompt, max_new_tokens=args.max_new))
-    results = server.run_until_drained()
+    if args.stream:
+        results = asyncio.run(_stream_clients(server, reqs, args.max_queue))
+    else:
+        for r in reqs:
+            server.submit(r)
+        results = server.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in results)
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "

@@ -1,4 +1,11 @@
 from repro.serving.engine import MultiModelServer, SERVABLE_FAMILIES
+from repro.serving.frontend import (
+    AsyncEngine,
+    Backpressure,
+    EngineClosed,
+    TokenStream,
+    start_http_server,
+)
 from repro.serving.metrics import ServerMetrics
 from repro.serving.prefill import ChunkedPrefill, PrefillOut
 from repro.serving.sampling import sample_tokens

@@ -41,6 +41,12 @@ both go through the axes-driven slot surgery in ``api.take_state`` /
 and are refilled from the queues — continuous batching at slot
 granularity; the decode path masks stale cache positions and idle slots
 simply sample into a discarded lane.
+
+The loop is synchronous and single-caller by design; concurrent clients,
+per-request token streams, cancellation and HTTP live one layer up in
+``serving/frontend`` (the ``AsyncEngine`` owns this engine's step loop
+on a background driver and consumes the ``on_token`` hook, ``cancel``
+and ``try_submit`` — DESIGN.md §6.4).
 """
 from __future__ import annotations
 
@@ -150,6 +156,12 @@ class MultiModelServer:
         self.generated: dict[int, list[int]] = {}
         self.steps = 0
         self._req_counter = 0
+        # per-token emission hook for streaming frontends: called as
+        # on_token(request_id, token, finished) for every decoding slot
+        # right after the fused step's tokens land on the host — the
+        # async frontend buffers these and fans them out to per-request
+        # streams.  Host-side only; the device program never changes
+        self.on_token = None
         self._key = jax.random.PRNGKey(seed)
         if mesh is not None:
             self._key = jax.device_put(self._key, self._rep_shard)
@@ -187,24 +199,117 @@ class MultiModelServer:
 
     # -- request admission ---------------------------------------------------
 
-    def submit(self, req: Request) -> int:
+    def validate(self, req: Request) -> str | None:
+        """The ONE admission-validation path: every reason a request can
+        never be served is decided here, before it touches a queue, so
+        both submit flavors (raise vs terminal Result) agree exactly."""
+        if not 0 <= req.instance < self.m:
+            return f"instance {req.instance} out of range [0, {self.m})"
         if not req.prompt:
-            raise ValueError("empty prompt")
+            return "empty prompt"
         # chunked prefill is length-agnostic: anything whose positions
         # (learned prefix + prompt) fit the serving context is accepted;
         # past that the cache physically cannot hold the prompt
         if len(req.prompt) > self.prefill.max_prompt_len():
-            raise ValueError(
+            return (
                 f"prompt of {len(req.prompt)} tokens exceeds the serving "
                 f"context: at most {self.prefill.max_prompt_len()} prompt "
                 f"tokens fit max_context={self.max_context}"
             )
+        if req.max_new_tokens < 1:
+            return f"max_new_tokens must be >= 1, got {req.max_new_tokens}"
+        return None
+
+    def try_submit(self, req: Request, *,
+                   submit_time: float | None = None) -> int | Result:
+        """Queue ``req`` and return its request_id, or — when validation
+        fails — return a terminal ``Result(status="rejected")`` instead
+        of raising.  Rejected requests still get a request_id and a
+        Result, exactly like cancelled/expired ones, so a frontend can
+        answer every submission with the same terminal object.
+
+        ``submit_time`` lets a frontend that queues commands ahead of
+        the engine (AsyncEngine) pass the CLIENT's clock, so
+        TTFT/latency include backpressure parking and command-queue
+        wait; without it the stamp is taken here (always — a reused
+        Request object never carries a stale epoch into the metrics)."""
         req.request_id = self._req_counter
         self._req_counter += 1
-        req.submit_time = time.perf_counter()
+        req.submit_time = (
+            submit_time if submit_time is not None else time.perf_counter()
+        )
+        err = self.validate(req)
+        if err is not None:
+            self.metrics.note_reject(req.instance)
+            return Result(
+                req.request_id, req.instance, [],
+                prompt_len=len(req.prompt) if req.prompt else 0,
+                status="rejected", error=err,
+            )
         self.scheduler.submit(req)
         self.metrics.note_submit(req.instance)
         return req.request_id
+
+    def submit(self, req: Request) -> int:
+        out = self.try_submit(req)
+        if isinstance(out, Result):
+            raise ValueError(out.error)
+        return out
+
+    # -- cancellation / eviction ---------------------------------------------
+
+    def cancel(self, request_id: int, *, status: str = "cancelled") -> Result | None:
+        """Abort a request wherever it is in its lifecycle and return its
+        terminal Result (partial tokens included), or None if it is not
+        live (already finished, rejected, or unknown).
+
+        * queued      — removed from its scheduler queue (never charged),
+        * prefilling  — its prefill lane is evicted and its reserved grid
+                        slot freed; both are reusable on the next step,
+        * decoding    — its slot is freed (the fused grid step treats it
+                        as an idle lane; its stale cache rows are masked)
+                        and refilled from the queues on the next step.
+
+        Host-side bookkeeping only: no device call, no new compiled
+        shape, and the one-device-call-per-step invariant is untouched.
+        """
+        req = self.scheduler.cancel(request_id)
+        if req is not None:                      # still queued
+            self.metrics.note_cancel(req.instance, queued=True,
+                                     request_id=request_id)
+            return Result(
+                request_id, req.instance, [], prompt_len=len(req.prompt),
+                latency_s=time.perf_counter() - req.submit_time,
+                status=status,
+            )
+        if request_id in self._reserved:         # mid-prefill
+            m, b = self._reserved.pop(request_id)
+            req = self.active[m][b]
+            self.prefill.abort(request_id)
+            self.slot_busy[m, b] = False
+            self.slot_prefilling[m, b] = False
+            self.active[m][b] = None
+            self.metrics.note_cancel(m, queued=False, request_id=request_id)
+            return Result(
+                request_id, m, [], prompt_len=len(req.prompt),
+                latency_s=time.perf_counter() - req.submit_time,
+                status=status,
+            )
+        for m in range(self.m):                  # mid-decode
+            for b in range(self.b):
+                req = self.active[m][b]
+                if req is not None and req.request_id == request_id:
+                    gen = self.generated.pop(request_id, [])
+                    self.slot_busy[m, b] = False
+                    self.active[m][b] = None
+                    self.metrics.note_cancel(m, queued=False,
+                                             request_id=request_id)
+                    return Result(
+                        request_id, m, gen, prompt_len=len(req.prompt),
+                        latency_s=time.perf_counter() - req.submit_time,
+                        status=status,
+                    )
+        return None
 
     def _admit(self):
         """Move pending requests into prefill lanes, reserving a grid
@@ -282,34 +387,55 @@ class MultiModelServer:
                 tok = int(nxt[m, b])
                 gen = self.generated[req.request_id]
                 self.metrics.note_token(
-                    m, first=not gen, submit_time=req.submit_time
+                    m, first=not gen, submit_time=req.submit_time,
+                    request_id=req.request_id,
                 )
                 self.scheduler.note_generated(m, 1)
                 gen.append(tok)
                 self.pos[m, b] += 1
                 self.cur_tok[m, b] = tok
+                hit_eos = self.eos_id is not None and tok == self.eos_id
                 finished = (
                     len(gen) >= req.max_new_tokens
-                    or (self.eos_id is not None and tok == self.eos_id)
+                    or hit_eos
                     or int(self.pos[m, b]) >= self.max_context - 1
                 )
+                if self.on_token is not None:
+                    self.on_token(req.request_id, tok, finished)
                 if finished:
                     done.append(Result(
                         req.request_id, m, gen,
                         prompt_len=len(req.prompt),
                         latency_s=time.perf_counter() - req.submit_time,
+                        finish_reason="stop" if hit_eos else "length",
                     ))
-                    self.metrics.note_complete(m, req.submit_time)
+                    self.metrics.note_complete(m, req.submit_time,
+                                               request_id=req.request_id)
                     self.slot_busy[m, b] = False
                     self.active[m][b] = None
                     del self.generated[req.request_id]
         return done
 
+    def reset_metrics(self) -> ServerMetrics:
+        """Fresh counters/sample windows (e.g. after a compile warmup,
+        so recorded percentiles carry no warmup outliers); re-points
+        every subsystem holding the metrics object."""
+        self.metrics = ServerMetrics(self.m, mesh=self.mesh)
+        self.prefill.metrics = self.metrics
+        return self.metrics
+
+    def busy(self) -> bool:
+        """Any live work: queued, prefilling, or decoding requests (what
+        the async frontend's driver polls between steps)."""
+        return bool(
+            self.slot_busy.any() or self.prefill.in_flight() > 0
+            or self.scheduler.total_pending() > 0
+        )
+
     def run_until_drained(self, max_steps: int = 10_000) -> list[Result]:
         out: list[Result] = []
         for _ in range(max_steps):
             out.extend(self.step())
-            if (not self.slot_busy.any() and self.prefill.in_flight() == 0
-                    and self.scheduler.total_pending() == 0):
+            if not self.busy():
                 return out
         raise RuntimeError("serving did not drain")

@@ -3,16 +3,39 @@
 The paper's deployment scenario is M task streams through one fused
 program; operators need to see each task's share.  ``ServerMetrics``
 keeps cheap host-side counters per instance — throughput, latency,
-time-to-first-token, queue depth — plus engine-wide counters (fused
-decode steps, prefill batches/compiles).  ``snapshot()`` returns plain
-dicts (JSON-able, used by benchmarks/serve_bench.py); ``format_table()``
+time-to-first-token, inter-token latency, queue depth — plus engine-wide
+counters (fused decode steps, prefill batches/compiles).  TTFT and ITL
+are also kept as bounded per-instance sample windows so ``snapshot()``
+carries p50/p95/p99 tail latencies (the figures an async frontend's SLO
+lives on), not just means.  ``snapshot()`` returns plain dicts
+(JSON-able, used by benchmarks/serve_bench.py); ``format_table()``
 renders the per-instance report printed by ``repro.launch.serve``.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import deque
 from typing import Callable
+
+# per-instance latency sample window: enough to make p99 meaningful at
+# serving scale, small enough that snapshots stay O(ms) host work
+MAX_LATENCY_SAMPLES = 4096
+
+
+def percentiles(samples, scale: float = 1e3) -> dict | None:
+    """p50/p95/p99 of ``samples`` (nearest-rank), scaled (default s->ms);
+    None when there are no samples — JSON-able either way."""
+    if not samples:
+        return None
+    xs = sorted(samples)
+    n = len(xs)
+
+    def q(p):
+        return scale * xs[min(n - 1, max(0, -(-p * n // 100) - 1))]
+
+    return {"p50": q(50), "p95": q(95), "p99": q(99)}
 
 
 @dataclasses.dataclass
@@ -20,6 +43,8 @@ class InstanceStats:
     submitted: int = 0
     admitted: int = 0
     completed: int = 0
+    cancelled: int = 0             # client cancel / disconnect / expiry
+    rejected: int = 0              # failed submit-time validation
     prompt_tokens: int = 0
     generated_tokens: int = 0
     queue_depth: int = 0           # current, updated on submit/admit
@@ -28,6 +53,10 @@ class InstanceStats:
     ttft_n: int = 0
     latency_sum: float = 0.0       # submit -> completion
     latency_n: int = 0
+    ttft_samples: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=MAX_LATENCY_SAMPLES))
+    itl_samples: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=MAX_LATENCY_SAMPLES))
 
 
 class ServerMetrics:
@@ -46,6 +75,14 @@ class ServerMetrics:
         # ran — what the engine's chunk_budget bounds per step
         self.admission_stall_s = 0.0
         self.started = clock()
+        # per-request arrival time of the previous token (ITL deltas);
+        # entries live exactly as long as the request decodes
+        self._last_token_t: dict[int, float] = {}
+        # the async frontend runs the step loop (note_token appends) on
+        # an executor thread while snapshot() may serve GET /metrics on
+        # the event-loop thread — guard the sample windows so iteration
+        # never races an append
+        self._lock = threading.Lock()
         # mesh-parametric serving: record the grid's mesh geometry so
         # snapshots carry per-device throughput (serve_bench JSON)
         self.mesh_shape = dict(mesh.shape) if mesh is not None else None
@@ -58,6 +95,10 @@ class ServerMetrics:
         st.submitted += 1
         st.queue_depth += 1
         st.queue_peak = max(st.queue_peak, st.queue_depth)
+
+    def note_reject(self, instance: int) -> None:
+        if 0 <= instance < self.m:
+            self.per_instance[instance].rejected += 1
 
     def note_admit(self, instance: int, prompt_len: int) -> None:
         st = self.per_instance[instance]
@@ -80,29 +121,63 @@ class ServerMetrics:
     def note_admission_stall(self, seconds: float) -> None:
         self.admission_stall_s += seconds
 
-    def note_token(self, instance: int, *, first: bool, submit_time: float) -> None:
+    def note_token(self, instance: int, *, first: bool, submit_time: float,
+                   request_id: int | None = None) -> None:
         st = self.per_instance[instance]
         st.generated_tokens += 1
-        if first:
-            st.ttft_sum += self.clock() - submit_time
-            st.ttft_n += 1
+        now = self.clock()
+        with self._lock:
+            if first:
+                st.ttft_sum += now - submit_time
+                st.ttft_n += 1
+                st.ttft_samples.append(now - submit_time)
+            elif request_id is not None and request_id in self._last_token_t:
+                st.itl_samples.append(now - self._last_token_t[request_id])
+            if request_id is not None:
+                self._last_token_t[request_id] = now
 
-    def note_complete(self, instance: int, submit_time: float) -> None:
+    def note_complete(self, instance: int, submit_time: float,
+                      request_id: int | None = None) -> None:
         st = self.per_instance[instance]
         st.completed += 1
         st.latency_sum += self.clock() - submit_time
         st.latency_n += 1
+        if request_id is not None:
+            self._last_token_t.pop(request_id, None)
+
+    def note_cancel(self, instance: int, *, queued: bool,
+                    request_id: int | None = None) -> None:
+        """A request left the system without completing (client cancel,
+        disconnect, deadline expiry) — from the queue (``queued=True``,
+        still counted in queue_depth) or from a prefill lane / decode
+        slot (already admitted)."""
+        if 0 <= instance < self.m:
+            st = self.per_instance[instance]
+            st.cancelled += 1
+            if queued:
+                st.queue_depth -= 1
+        if request_id is not None:
+            self._last_token_t.pop(request_id, None)
 
     # -- reporting -----------------------------------------------------------
 
     def snapshot(self) -> dict:
         dt = max(self.clock() - self.started, 1e-9)
         inst = []
+        all_ttft: list[float] = []
+        all_itl: list[float] = []
         for st in self.per_instance:
+            with self._lock:
+                ttft_samples = list(st.ttft_samples)
+                itl_samples = list(st.itl_samples)
+            all_ttft.extend(ttft_samples)
+            all_itl.extend(itl_samples)
             inst.append({
                 "submitted": st.submitted,
                 "admitted": st.admitted,
                 "completed": st.completed,
+                "cancelled": st.cancelled,
+                "rejected": st.rejected,
                 "queue_depth": st.queue_depth,
                 "queue_peak": st.queue_peak,
                 "prompt_tokens": st.prompt_tokens,
@@ -110,6 +185,8 @@ class ServerMetrics:
                 "tok_per_s": st.generated_tokens / dt,
                 "mean_ttft_s": st.ttft_sum / st.ttft_n if st.ttft_n else None,
                 "mean_latency_s": st.latency_sum / st.latency_n if st.latency_n else None,
+                "ttft_ms": percentiles(ttft_samples),
+                "itl_ms": percentiles(itl_samples),
             })
         gen = sum(s.generated_tokens for s in self.per_instance)
         # split throughput: prefill rate over the settled admission wall
@@ -134,6 +211,10 @@ class ServerMetrics:
             "admission_stall_ms": 1e3 * self.admission_stall_s,
             "generated_tokens": gen,
             "tok_per_s": gen / dt,
+            "cancelled": sum(s.cancelled for s in self.per_instance),
+            "rejected": sum(s.rejected for s in self.per_instance),
+            "ttft_ms": percentiles(all_ttft),
+            "itl_ms": percentiles(all_itl),
             "instances": inst,
         }
         if self.mesh_shape is not None:
@@ -146,18 +227,25 @@ class ServerMetrics:
     def format_table(self) -> str:
         snap = self.snapshot()
         hdr = (
-            f"{'inst':>4} {'done':>5} {'queue':>5} {'peak':>5} "
-            f"{'prompt':>7} {'gen':>7} {'tok/s':>8} {'ttft_ms':>8} {'lat_ms':>8}"
+            f"{'inst':>4} {'done':>5} {'can':>4} {'queue':>5} {'peak':>5} "
+            f"{'prompt':>7} {'gen':>7} {'tok/s':>8} "
+            f"{'ttft50':>7} {'ttft95':>7} {'itl50':>7} {'itl95':>7} {'lat_ms':>8}"
         )
         rows = [hdr, "-" * len(hdr)]
+
+        def pct(d, key):
+            return f"{d[key]:.1f}" if d is not None else "-"
+
         for i, st in enumerate(snap["instances"]):
-            ttft = f"{1e3 * st['mean_ttft_s']:.1f}" if st["mean_ttft_s"] is not None else "-"
             lat = f"{1e3 * st['mean_latency_s']:.1f}" if st["mean_latency_s"] is not None else "-"
             rows.append(
-                f"{i:>4} {st['completed']:>5} {st['queue_depth']:>5} "
-                f"{st['queue_peak']:>5} {st['prompt_tokens']:>7} "
-                f"{st['generated_tokens']:>7} {st['tok_per_s']:>8.1f} "
-                f"{ttft:>8} {lat:>8}"
+                f"{i:>4} {st['completed']:>5} {st['cancelled']:>4} "
+                f"{st['queue_depth']:>5} {st['queue_peak']:>5} "
+                f"{st['prompt_tokens']:>7} {st['generated_tokens']:>7} "
+                f"{st['tok_per_s']:>8.1f} "
+                f"{pct(st['ttft_ms'], 'p50'):>7} {pct(st['ttft_ms'], 'p95'):>7} "
+                f"{pct(st['itl_ms'], 'p50'):>7} {pct(st['itl_ms'], 'p95'):>7} "
+                f"{lat:>8}"
             )
         rows.append(
             f"total: {snap['generated_tokens']} tokens in {snap['wall_s']:.2f}s "
@@ -169,4 +257,14 @@ class ServerMetrics:
             f"decode {snap['decode_tok_per_s']:.1f} tok/s, "
             f"{snap['admission_stall_ms']:.1f} ms admission stall"
         )
+        if snap["ttft_ms"] is not None:
+            t, it = snap["ttft_ms"], snap["itl_ms"]
+            itl = (
+                f"itl p50/p95/p99 {it['p50']:.1f}/{it['p95']:.1f}/{it['p99']:.1f} ms"
+                if it is not None else "itl -"
+            )
+            rows.append(
+                f"tails: ttft p50/p95/p99 "
+                f"{t['p50']:.1f}/{t['p95']:.1f}/{t['p99']:.1f} ms, {itl}"
+            )
         return "\n".join(rows)

@@ -204,6 +204,19 @@ class ChunkedPrefill:
                 return
         raise RuntimeError("no free prefill lane")
 
+    def abort(self, request_id: int) -> bool:
+        """Evict a mid-flight request from its lane (client cancel /
+        disconnect / deadline expiry).  The lane is free for the very
+        next ``start``; its carry rows are left as-is — binding a new
+        request sets ``fresh``, which re-initializes the rows in-graph,
+        so no device call and no extra compiled shape is spent on the
+        eviction."""
+        for lane in self._lanes:
+            if lane.req is not None and lane.req.request_id == request_id:
+                lane.req = None
+                return True
+        return False
+
     # -- static per-call inputs ----------------------------------------------
 
     def _static_inputs(self) -> dict:

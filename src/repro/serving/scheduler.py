@@ -52,6 +52,14 @@ class Result:
     tokens: list[int]              # generated tokens (excluding prompt)
     prompt_len: int = 0
     latency_s: float = 0.0
+    # terminal state: every request the engine ever accepted (and, via
+    # ``try_submit``, every request it rejected) ends in exactly one
+    # Result — the async frontend's stream fan-out keys off this
+    status: str = "ok"             # ok | rejected | cancelled | expired
+    error: str | None = None       # human-readable reason for non-ok
+    # why an ok decode stopped: "stop" (EOS) or "length" (max_new_tokens
+    # / context cap) — OpenAI vocabulary, surfaced by the HTTP layer
+    finish_reason: str | None = None
 
 
 class Scheduler:
@@ -105,6 +113,20 @@ class Scheduler:
 
     def total_pending(self) -> int:
         return sum(len(q) for q in self.queues)
+
+    def cancel(self, request_id: int) -> Request | None:
+        """Remove a still-queued request; return it, or None if it is not
+        queued here (already admitted, finished, or unknown).  Pure queue
+        surgery — policy state is untouched, which is exact for every
+        policy: fifo/round-robin keep no per-request state and
+        token-budget charges prompts at admission (select), so a request
+        cancelled before admission was never charged."""
+        for q in self.queues:
+            for req in q:
+                if req.request_id == request_id:
+                    q.remove(req)
+                    return req
+        return None
 
     # -- accounting hook (token-budget fairness) ----------------------------
     # The engine reports each generated token; prompt tokens are charged by
