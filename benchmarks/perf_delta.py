@@ -3,6 +3,14 @@ EXPERIMENTS.md §Perf spillover: the §Perf work shipped as production
 defaults, so EVERY pair moved, not just the three hillclimbed ones.
 
   PYTHONPATH=src python -m benchmarks.perf_delta [--mesh 1pod]
+
+``--serve OLD.json NEW.json`` diffs two serve-bench records instead
+(BENCH_serve.json across PRs): fused/sequential throughput, speedup,
+and — once both sides carry the ``obs`` section — per-step dispatch
+overhead p50/p95 and mean grid occupancy, so a dispatch regression
+shows up as a number, not a vibe.
+
+  python -m benchmarks.perf_delta --serve BENCH_serve_old.json BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -23,10 +31,63 @@ def load(d: str, mesh: str) -> dict:
     return out
 
 
+def _serve_metric(rec: dict, path: tuple):
+    """Walk a key path into a serve record; None when any hop is absent
+    (old records predate the obs section)."""
+    cur = rec
+    for k in path:
+        if not isinstance(cur, dict) or k not in cur or cur[k] is None:
+            return None
+        cur = cur[k]
+    return cur
+
+
+# (label, key path, higher-is-better) — the serve-record trajectory
+_SERVE_METRICS = (
+    ("fused tok/s", ("fused", "tok_per_s"), True),
+    ("sequential tok/s", ("sequential", "tok_per_s"), True),
+    ("speedup (seq/fused wall)", ("speedup",), True),
+    ("dispatch amortization", ("dispatch_amortization",), True),
+    ("dispatch overhead p50 (ms)", ("dispatch_overhead_ms", "p50"), False),
+    ("dispatch overhead p95 (ms)", ("dispatch_overhead_ms", "p95"), False),
+    ("mean grid occupancy", ("mean_grid_occupancy",), True),
+    ("idle slot token-steps", ("obs", "idle_slot_token_steps"), False),
+    ("tracing overhead (%)", ("obs", "tracing_overhead_pct"), False),
+)
+
+
+def serve_delta(old_path: str, new_path: str) -> None:
+    old = json.load(open(old_path))
+    new = json.load(open(new_path))
+    print(f"| metric | {Path(old_path).stem} | {Path(new_path).stem} | Δ |")
+    print("|---|---|---|---|")
+    for label, path, hib in _SERVE_METRICS:
+        a, b = _serve_metric(old, path), _serve_metric(new, path)
+        if a is None and b is None:
+            continue
+        fa = f"{a:.3g}" if a is not None else "—"
+        fb = f"{b:.3g}" if b is not None else "—"
+        if a is None or b is None:
+            d = "new" if a is None else "dropped"
+        elif a == b:
+            d = "="
+        else:
+            denom = a if hib else b
+            ratio = ((b / a) if hib else (a / b)) if denom else float("inf")
+            d = f"{ratio:.2f}× {'better' if ratio >= 1 else 'worse'}"
+        print(f"| {label} | {fa} | {fb} | {d} |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="1pod")
+    ap.add_argument("--serve", nargs=2, metavar=("OLD.json", "NEW.json"),
+                    help="diff two serve-bench records instead of the "
+                         "dry-run rooflines")
     args = ap.parse_args()
+    if args.serve:
+        serve_delta(*args.serve)
+        return
     base = load("results/dryrun_baseline", args.mesh)
     final = load("results/dryrun", args.mesh)
 

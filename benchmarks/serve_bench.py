@@ -32,6 +32,16 @@ throttling the offered load.  The run streams through the
 ``AsyncEngine`` frontend and contributes per-instance TTFT and
 inter-token-latency p50/p95/p99 to the record (``load_gen`` section) —
 validated finite like every other throughput field.
+
+Observability (``obs`` section, DESIGN.md §6.5): a step-traced pass
+records per-device-call dispatch overhead p50/p95/p99, mean grid
+occupancy, idle-slot token-steps and the tracing on/off throughput A/B;
+``dispatch_overhead_ms`` and ``mean_grid_occupancy`` are promoted to
+top-level fields so ``perf_delta.py --serve`` can diff the dispatch
+trajectory across PRs.  ``--trace-out trace.json`` dumps the pass's
+Chrome-trace JSON (Perfetto / chrome://tracing); ``--profile-kernels``
+times each serving Pallas kernel at the run's shapes and records
+achieved-vs-roofline figures (``kernel_roofline``).
 """
 from __future__ import annotations
 
@@ -231,6 +241,37 @@ def _run_load_gen(cfg, merged, mesh, args, reqs) -> dict:
     }
 
 
+def _run_observed(cfg, merged, mesh, args, reqs) -> tuple[dict, dict]:
+    """The observability pass (DESIGN.md §6.5): the fused workload run
+    once with step tracing OFF and once ON — the off pass prices the
+    disabled tracer (one attribute read per call site), the on pass
+    yields per-device-call dispatch gaps, grid occupancy and request
+    spans.  Returns (obs section, chrome trace)."""
+    server = _mk_server(cfg, merged, mesh, args)
+    mk = lambda: [Request(r.instance, list(r.prompt), r.max_new_tokens)
+                  for r in reqs]
+    _drain(server, mk())               # compile warmup
+    off = _drain(server, mk())
+    server.tracer.start()
+    on = _drain(server, mk())
+    server.tracer.stop()
+    summary = server.tracer.summary()
+    chrome = server.tracer.export_chrome()
+    obs = dict(summary)
+    obs.update({
+        "tok_per_s_untraced": off["tok_per_s"],
+        "tok_per_s_traced": on["tok_per_s"],
+        # tracing-ON cost (per-chunk settling + event records); the
+        # tracing-OFF cost is structurally zero — the guard test in
+        # tests/test_serving_obs.py proves no tracer code runs at all
+        "tracing_overhead_pct": 100.0 * (
+            off["tok_per_s"] / on["tok_per_s"] - 1.0
+        ) if on["tok_per_s"] > 0 else None,
+        "trace_events": len(chrome["traceEvents"]),
+    })
+    return obs, chrome
+
+
 _THROUGHPUT_FIELDS = ("tok_per_s", "prefill_tok_per_s", "decode_tok_per_s",
                       "device_calls_per_admission")
 _PCT_KEYS = ("p50", "p95", "p99")
@@ -279,6 +320,24 @@ def validate_record(record: dict) -> None:
                 if inst["generated_tokens"] > inst["completed"]:
                     check_pct(inst["itl_ms"],
                               f"load_gen.per_instance[{i}].itl_ms")
+    # observability section: dispatch overhead + occupancy must be
+    # present and finite — a trace regression fails the bench, not just
+    # a dashboard (ISSUE 6 acceptance / CI bench-smoke)
+    obs = record["obs"]
+    check_pct(obs["dispatch_overhead_ms"], "obs.dispatch_overhead_ms")
+    check_pct(record["dispatch_overhead_ms"], "dispatch_overhead_ms")
+    for f in ("mean_grid_occupancy", "mean_dispatch_gap_ms",
+              "tok_per_s_untraced", "tok_per_s_traced"):
+        v = obs[f]
+        assert isinstance(v, (int, float)) and _math.isfinite(v), (
+            f"obs: {f} is not finite: {v!r}")
+    assert 0.0 <= obs["mean_grid_occupancy"] <= 1.0, obs["mean_grid_occupancy"]
+    v = record["mean_grid_occupancy"]
+    assert isinstance(v, (int, float)) and _math.isfinite(v), v
+    assert obs["trace_events"] > 0 and obs["device_calls"] > 0
+    if record.get("kernel_roofline") is not None:
+        from repro.serving.obs import validate_profile
+        validate_profile(record["kernel_roofline"])
 
 
 def main():
@@ -314,6 +373,13 @@ def main():
                     help="force N host-platform devices and serve sharded")
     ap.add_argument("--mesh-shape", default=None, metavar="DxT",
                     help="(data, model) mesh shape, e.g. 2x4")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write the observability pass's Chrome-trace JSON "
+                         "here (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--profile-kernels", action="store_true",
+                    help="time each serving Pallas kernel at this config's "
+                         "shapes and record achieved-vs-roofline figures "
+                         "(record['kernel_roofline'])")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -403,6 +469,24 @@ def main():
         if args.clients > 0 else None
     )
 
+    # step-trace observability pass: per-device-call dispatch overhead,
+    # grid occupancy, and the tracing on/off throughput A/B
+    obs, chrome = _run_observed(cfg, merged, mesh, args, reqs)
+    if args.trace_out:
+        with open(args.trace_out, "w") as f:
+            json.dump(chrome, f)
+        print(f"wrote {args.trace_out} "
+              f"({len(chrome['traceEvents'])} trace events)")
+
+    kernel_roofline = None
+    if args.profile_kernels:
+        from repro.serving.obs import profile_serving_kernels, format_table
+        kernel_roofline = profile_serving_kernels(
+            cfg, slots=args.slots, max_context=max_context,
+            chunk=args.chunk, prefill_lanes=args.lanes,
+        )
+        print(format_table(kernel_roofline))
+
     num_devices = fused_server.metrics.num_devices
     record = {
         "bench": "serve_fused_vs_sequential",
@@ -425,6 +509,12 @@ def main():
         "sequential": seq,
         "tail_folding": tail_folding,
         "load_gen": load_gen,
+        "obs": obs,
+        # promoted to top level so perf_delta can diff the dispatch
+        # trajectory across PRs without digging into the section
+        "dispatch_overhead_ms": obs["dispatch_overhead_ms"],
+        "mean_grid_occupancy": obs["mean_grid_occupancy"],
+        "kernel_roofline": kernel_roofline,
         # only a measured figure when actually serving sharded
         "fused_tok_per_s_per_device": (
             fused["tok_per_s"] / num_devices if mesh is not None else None

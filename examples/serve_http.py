@@ -10,8 +10,14 @@ smoke TinyLlama config), exposes it over HTTP on an ephemeral port
      bodies agree (greedy determinism),
   3. a rude client disconnects mid-stream — the server cancels the
      request and frees its slot (visible in the metrics),
-  4. GET /metrics shows per-instance TTFT/ITL p50/p95/p99,
-  5. the engine drains gracefully.
+  4. POST /debug/trace/start turns on the step tracer, a traced
+     completion runs, GET /debug/trace downloads the Chrome-trace JSON
+     (open in Perfetto / chrome://tracing), POST /debug/trace/stop
+     returns the aggregate summary (DESIGN.md §6.5),
+  5. GET /metrics shows per-instance TTFT/ITL p50/p95/p99 — as JSON,
+     then again with ``Accept: text/plain`` for the Prometheus
+     exposition,
+  6. the engine drains gracefully.
 
 Everything is stdlib: asyncio server, asyncio TCP clients, token-id
 prompts (this repro has no tokenizer).
@@ -31,12 +37,13 @@ from repro.serving import AsyncEngine, MultiModelServer, start_http_server
 M = 2
 
 
-async def http_roundtrip(port, method, path, payload=None):
+async def http_roundtrip(port, method, path, payload=None, accept=None):
     reader, writer = await asyncio.open_connection("127.0.0.1", port)
     body = json.dumps(payload).encode() if payload is not None else b""
+    extra = f"Accept: {accept}\r\n" if accept else ""
     writer.write(
         f"{method} {path} HTTP/1.1\r\nHost: example\r\n"
-        f"Content-Type: application/json\r\n"
+        f"Content-Type: application/json\r\n{extra}"
         f"Content-Length: {len(body)}\r\n\r\n".encode() + body
     )
     await writer.drain()
@@ -111,7 +118,28 @@ async def main_async(server):
         await asyncio.sleep(0.02)
     print("  request cancelled, slot freed (engine drained)")
 
-    # 4. metrics: percentile tails per instance
+    # 4. step tracing over HTTP: start -> traced completion -> download
+    #    the Chrome trace -> stop (returns the aggregate summary)
+    print("\n== /debug/trace (DESIGN.md §6.5) ==")
+    await http_roundtrip(port, "POST", "/debug/trace/start", {})
+    await http_roundtrip(port, "POST", "/v1/completions", {
+        "model": "model-1", "prompt": [21, 22, 23, 24], "max_tokens": 5,
+    })
+    head, rest = await http_roundtrip(port, "GET", "/debug/trace")
+    chrome = json.loads(rest)
+    with open("trace.json", "w") as f:
+        json.dump(chrome, f)
+    print(f"  wrote trace.json: {len(chrome['traceEvents'])} events "
+          f"(load in Perfetto / chrome://tracing)")
+    head, rest = await http_roundtrip(port, "POST", "/debug/trace/stop", {})
+    summ = json.loads(rest)["summary"]
+    do = summ["dispatch_overhead_ms"]
+    print(f"  summary: {summ['device_calls']} device calls, dispatch "
+          f"overhead p50/p95 = {do['p50']:.2f}/{do['p95']:.2f} ms, "
+          f"grid occupancy {summ['mean_grid_occupancy']:.2f}")
+
+    # 5. metrics: percentile tails per instance — JSON by default,
+    #    Prometheus exposition under Accept: text/plain
     head, rest = await http_roundtrip(port, "GET", "/metrics")
     snap = json.loads(rest)
     print("\n== GET /metrics ==")
@@ -122,8 +150,13 @@ async def main_async(server):
         print(f"  instance {i}: completed={inst['completed']} "
               f"ttft p50/p95 = "
               + (f"{t['p50']:.1f}/{t['p95']:.1f} ms" if t else "-"))
+    head, rest = await http_roundtrip(port, "GET", "/metrics",
+                                      accept="text/plain")
+    print("  Prometheus exposition (Accept: text/plain), first lines:")
+    for line in rest.decode().splitlines()[:4]:
+        print(f"    {line}")
 
-    # 5. graceful teardown
+    # 6. graceful teardown
     http.close()
     await http.wait_closed()
     await engine.aclose()

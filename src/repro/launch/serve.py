@@ -129,6 +129,11 @@ def main():
     ap.add_argument("--max-queue", type=int, default=0,
                     help="per-instance queue bound for the async frontend "
                          "(0 = unbounded); full queues answer HTTP 429")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="capture a step trace of the run and write it as "
+                         "Chrome-trace JSON (Perfetto / chrome://tracing); "
+                         "with --http, toggle capture via POST "
+                         "/debug/trace/start|stop instead")
     args = ap.parse_args()
 
     base = registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
@@ -181,6 +186,8 @@ def main():
         )
         for i in range(args.requests)
     ]
+    if args.trace_out:
+        server.tracer.start()
     t0 = time.perf_counter()
     if args.stream:
         results = asyncio.run(_stream_clients(server, reqs, args.max_queue))
@@ -189,6 +196,19 @@ def main():
             server.submit(r)
         results = server.run_until_drained()
     dt = time.perf_counter() - t0
+    if args.trace_out:
+        import json as _json
+        server.tracer.stop()
+        chrome = server.tracer.export_chrome()
+        summ = server.tracer.summary()
+        with open(args.trace_out, "w") as f:
+            _json.dump(chrome, f)
+        do = summ["dispatch_overhead_ms"]
+        print(f"wrote {args.trace_out}: {len(chrome['traceEvents'])} events, "
+              f"dispatch overhead p50/p95 "
+              f"{do['p50']:.2f}/{do['p95']:.2f} ms, "
+              f"grid occupancy {summ['mean_grid_occupancy']:.2f}"
+              if do is not None else f"wrote {args.trace_out}")
     toks = sum(len(r.tokens) for r in results)
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s, {server.steps} fused decode steps, "

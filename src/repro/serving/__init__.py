@@ -7,6 +7,7 @@ from repro.serving.frontend import (
     start_http_server,
 )
 from repro.serving.metrics import ServerMetrics
+from repro.serving.obs import Tracer, render_prometheus
 from repro.serving.prefill import ChunkedPrefill, PrefillOut
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import (

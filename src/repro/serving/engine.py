@@ -61,6 +61,7 @@ from repro import api
 from repro.launch.compat import mesh_context
 from repro.models import common as C
 from repro.serving.metrics import ServerMetrics
+from repro.serving.obs.trace import Tracer
 from repro.serving.prefill import ChunkedPrefill
 from repro.serving.sampling import make_grid_sampler
 from repro.serving.scheduler import Request, Result, Scheduler, make_scheduler
@@ -90,6 +91,7 @@ class MultiModelServer:
         donate: bool | None = None,
         mesh=None,
         rules=None,
+        tracer: Tracer | None = None,
     ):
         assert cfg.family in SERVABLE_FAMILIES, cfg.family
         if cfg.family == "hybrid":
@@ -114,12 +116,18 @@ class MultiModelServer:
             if isinstance(scheduler, str) else scheduler
         )
         self.metrics = ServerMetrics(self.m, mesh=mesh)
+        # step tracer (DESIGN.md §6.5): always attached, OFF by default —
+        # every hot-path call site guards on ``tracer.enabled``, so the
+        # disabled path reads one attribute and constructs nothing
+        self.tracer = tracer if tracer is not None else Tracer()
         self.prefill = ChunkedPrefill(
             cfg, max_context=max_context, chunk=prefill_chunk,
             lanes=prefill_lanes, metrics=self.metrics,
             mesh=mesh, rules=self.rules,
-            tail_fold=tail_fold, donate=donate,
+            tail_fold=tail_fold, donate=donate, tracer=self.tracer,
         )
+        self.metrics.compiled_shapes_fn = \
+            lambda: self.prefill.compiled_shapes
         self.chunk_budget = max(1, chunk_budget)
 
         self.params = params
@@ -248,6 +256,9 @@ class MultiModelServer:
             )
         self.scheduler.submit(req)
         self.metrics.note_submit(req.instance)
+        if self.tracer.enabled:
+            self.tracer.request_event(req.request_id, "submit",
+                                      instance=req.instance)
         return req.request_id
 
     def submit(self, req: Request) -> int:
@@ -277,6 +288,9 @@ class MultiModelServer:
         if req is not None:                      # still queued
             self.metrics.note_cancel(req.instance, queued=True,
                                      request_id=request_id)
+            if self.tracer.enabled:
+                self.tracer.request_event(request_id, "cancel",
+                                          instance=req.instance, status=status)
             return Result(
                 request_id, req.instance, [], prompt_len=len(req.prompt),
                 latency_s=time.perf_counter() - req.submit_time,
@@ -290,6 +304,9 @@ class MultiModelServer:
             self.slot_prefilling[m, b] = False
             self.active[m][b] = None
             self.metrics.note_cancel(m, queued=False, request_id=request_id)
+            if self.tracer.enabled:
+                self.tracer.request_event(request_id, "cancel",
+                                          instance=m, status=status)
             return Result(
                 request_id, m, [], prompt_len=len(req.prompt),
                 latency_s=time.perf_counter() - req.submit_time,
@@ -304,6 +321,9 @@ class MultiModelServer:
                     self.active[m][b] = None
                     self.metrics.note_cancel(m, queued=False,
                                              request_id=request_id)
+                    if self.tracer.enabled:
+                        self.tracer.request_event(request_id, "cancel",
+                                                  instance=m, status=status)
                     return Result(
                         request_id, m, gen, prompt_len=len(req.prompt),
                         latency_s=time.perf_counter() - req.submit_time,
@@ -331,14 +351,34 @@ class MultiModelServer:
             self.active[m][b] = req
             self.prefill.start(req)
             self.metrics.note_admit(m, len(req.prompt))
+            if self.tracer.enabled:
+                self.tracer.request_event(req.request_id, "admit",
+                                          instance=m)
 
     def _finish_prefills(self, completed) -> None:
         """Scatter completed prefill lanes into their reserved slots and
         flip them to decoding."""
+        tr = self.tracer
         for req, out in completed:
             m, b = self._reserved.pop(req.request_id)
+            trace_on = tr.enabled
+            if trace_on:
+                t0 = time.perf_counter()
             with self._ctx():
                 self.cache = self._scatter(self.cache, out.cache, out.index, m, b)
+            self.metrics.note_scatter()
+            if trace_on:
+                t1 = time.perf_counter()
+                # settle so the event's device time is real execution,
+                # not dispatch (tracing-on only; the scatter's result is
+                # consumed by this step's decode anyway)
+                jax.block_until_ready(self.cache)
+                tr.device_call(
+                    "scatter", t0, t1, time.perf_counter(),
+                    step=self.steps, capacity=self.m * self.b,
+                    active=int((self.slot_busy & ~self.slot_prefilling).sum()),
+                )
+                tr.request_event(req.request_id, "prefill_done", instance=m)
             self.pos[m, b] = out.pos
             self.cur_tok[m, b] = out.last_token
             self.slot_prefilling[m, b] = False
@@ -355,7 +395,8 @@ class MultiModelServer:
         self._admit()
         if self.prefill.in_flight():
             t0 = time.perf_counter()
-            completed = self.prefill.advance(self.params, self.chunk_budget)
+            completed = self.prefill.advance(self.params, self.chunk_budget,
+                                             step=self.steps)
             stall = time.perf_counter() - t0
             # decode-ready slots sat idle for this long while admission
             # chunks ran — the quantity the chunk budget bounds
@@ -370,13 +411,32 @@ class MultiModelServer:
             pos = jax.device_put(self.pos, self._grid_shard)
         else:
             tok, pos = jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
+        tr = self.tracer
+        trace_on = tr.enabled
+        if trace_on:
+            t0 = time.perf_counter()
         with self._ctx():
             nxt, self.cache, self._key = self._step(
                 self.params, self.cache, tok, pos, self._key,
             )
+        if trace_on:
+            t_dispatch = time.perf_counter()
         self.steps += 1
         self.metrics.note_decode_step()
+        # device_get blocks until the fused step's tokens land: the
+        # settled timestamp is end-to-end device-call wall time
         nxt = np.asarray(jax.device_get(nxt))
+        if trace_on:
+            tr.device_call(
+                "decode", t0, t_dispatch, time.perf_counter(),
+                step=self.steps,
+                active=int((self.slot_busy & ~self.slot_prefilling).sum()),
+                capacity=self.m * self.b,
+                lanes_busy=self.prefill.in_flight(),
+                lanes=self.prefill.lanes,
+                tokens=int((self.slot_busy & ~self.slot_prefilling).sum()),
+                pending=self.scheduler.total_pending(),
+            )
 
         done: list[Result] = []
         for m in range(self.m):
@@ -411,6 +471,9 @@ class MultiModelServer:
                     ))
                     self.metrics.note_complete(m, req.submit_time,
                                                request_id=req.request_id)
+                    if trace_on:
+                        tr.request_event(req.request_id, "finish",
+                                         instance=m, status="ok")
                     self.slot_busy[m, b] = False
                     self.active[m][b] = None
                     del self.generated[req.request_id]
@@ -421,6 +484,8 @@ class MultiModelServer:
         so recorded percentiles carry no warmup outliers); re-points
         every subsystem holding the metrics object."""
         self.metrics = ServerMetrics(self.m, mesh=self.mesh)
+        self.metrics.compiled_shapes_fn = \
+            lambda: self.prefill.compiled_shapes
         self.prefill.metrics = self.metrics
         return self.metrics
 

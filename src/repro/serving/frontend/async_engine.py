@@ -253,6 +253,58 @@ class AsyncEngine:
         self._wake.set()
         return await fut
 
+    def driver_status(self) -> str:
+        """Liveness of the driver task (the /healthz signal):
+        ``not-started`` / ``running`` / ``stopped`` (clean exit) /
+        ``failed`` (died on an exception — the engine is wedged and the
+        HTTP layer serves 503)."""
+        if self._driver is None:
+            return "not-started"
+        if not self._driver.done():
+            return "running"
+        if self._driver.cancelled():
+            return "failed"
+        return "failed" if self._driver.exception() is not None else "stopped"
+
+    def in_flight(self) -> int:
+        """Requests with live streams (queued + prefilling + decoding)."""
+        return len(self._streams)
+
+    async def run_in_step_gap(self, fn):
+        """Run ``fn()`` on the driver task strictly BETWEEN engine steps
+        and return its result — the single-writer-safe way to mutate
+        engine state (reset metrics, toggle tracing) from a client
+        coroutine.  When no driver is running (never started, drained,
+        or dead) the call runs directly: with the step loop stopped
+        there is no device step to race."""
+        self._ensure_started()
+        if self._closing and (self._driver is None or self._driver.done()):
+            return fn()
+        fut = self._loop.create_future()
+        self._commands.append(("call", fn, fut))
+        self._wake.set()
+        return await fut
+
+    async def reset_metrics(self) -> None:
+        """Zero the metrics window (applied between steps)."""
+        await self.run_in_step_gap(self.server.reset_metrics)
+
+    async def set_tracing(self, on: bool) -> dict:
+        """Toggle step-trace capture on the live engine (applied between
+        steps, so no device call is half-traced).  Starting clears the
+        ring; stopping returns the capture's aggregate summary."""
+        tracer = self.server.tracer
+        if on:
+            def fn():
+                tracer.start()
+                return {"tracing": True}
+        else:
+            def fn():
+                summary = tracer.summary()
+                tracer.stop()
+                return {"tracing": False, "summary": summary}
+        return await self.run_in_step_gap(fn)
+
     async def cancel(self, request_id: int, *, status: str = "cancelled") -> bool:
         """Abort a live request (queued / prefilling / decoding); its
         stream ends with the partial tokens and the given terminal
@@ -314,6 +366,16 @@ class AsyncEngine:
                     self._finish(res)
                 if not fut.cancelled():
                     fut.set_result(res is not None)
+            elif cmd[0] == "call":
+                _, fn, fut = cmd
+                if fut.cancelled():
+                    continue
+                try:
+                    out = fn()
+                except BaseException as e:   # surfaced to the caller only
+                    fut.set_exception(e)
+                else:
+                    fut.set_result(out)
             elif cmd[0] == "abort_all":
                 for rid in list(self._streams):
                     res = self.server.cancel(rid)

@@ -18,7 +18,17 @@ fused (M, B) engine to network clients:
   as a disconnect too: keep the write side open for the whole stream.)
 * ``GET /v1/models`` — the instance-row routing table.
 * ``GET /metrics`` — the full ``ServerMetrics.snapshot()`` JSON,
-  including per-instance TTFT/ITL p50/p95/p99.
+  including per-instance TTFT/ITL p50/p95/p99.  ``Accept: text/plain``
+  (or any ``openmetrics`` media type) negotiates Prometheus text
+  exposition instead — same counters, scrapable.
+* ``POST /metrics/reset`` — zero the metrics window (applied between
+  engine steps; cumulative compiled-shape counts survive).
+* ``GET /healthz`` — driver-task liveness, per-instance queue depths,
+  in-flight request count; answers 503 once the driver task has died.
+* ``GET /debug/trace`` — the step tracer's capture as Chrome-trace
+  JSON (load in Perfetto / chrome://tracing); ``POST
+  /debug/trace/start`` / ``/debug/trace/stop`` toggle capture on the
+  live engine (stop returns the aggregate summary).
 
 Backpressure maps to HTTP: a full bounded queue answers ``429`` with
 the queue depth in the body and a ``Retry-After`` hint (the engine-side
@@ -308,13 +318,44 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
                     ],
                 })
             elif path == "/metrics" and method == "GET":
-                _write_response(writer, 200, engine.server.metrics.snapshot())
+                snap = engine.server.metrics.snapshot()
+                accept = _headers.get("accept", "")
+                if "text/plain" in accept or "openmetrics" in accept:
+                    from repro.serving.obs.prometheus import render
+                    _write_response(
+                        writer, 200, render(snap).encode(),
+                        ctype="text/plain; version=0.0.4; charset=utf-8",
+                    )
+                else:
+                    _write_response(writer, 200, snap)
+            elif path == "/metrics/reset" and method == "POST":
+                await engine.reset_metrics()
+                _write_response(writer, 200, {"status": "reset"})
             elif path == "/healthz" and method == "GET":
-                _write_response(writer, 200, {
-                    "status": "ok", "busy": engine.server.busy(),
+                status = engine.driver_status()
+                # a failed driver means no step will ever run again:
+                # the load balancer must stop routing here
+                dead = status == "failed"
+                _write_response(writer, 503 if dead else 200, {
+                    "status": "error" if dead else "ok",
+                    "driver": status,
+                    "busy": engine.server.busy(),
+                    "in_flight": engine.in_flight(),
+                    "queue_depths": engine.server.scheduler.depths(),
+                    "tracing": engine.server.tracer.enabled,
                 })
+            elif path == "/debug/trace" and method == "GET":
+                _write_response(writer, 200,
+                                engine.server.tracer.export_chrome())
+            elif path == "/debug/trace/start" and method == "POST":
+                _write_response(writer, 200,
+                                await engine.set_tracing(True))
+            elif path == "/debug/trace/stop" and method == "POST":
+                _write_response(writer, 200,
+                                await engine.set_tracing(False))
             elif path in ("/v1/completions", "/v1/models", "/metrics",
-                          "/healthz"):
+                          "/metrics/reset", "/healthz", "/debug/trace",
+                          "/debug/trace/start", "/debug/trace/stop"):
                 _error(writer, 405, f"method {method} not allowed on {path}")
             else:
                 _error(writer, 404, f"no route for {method} {path}")

@@ -70,7 +70,14 @@ class ServerMetrics:
         self.prefill_requests = 0    # lane-steps served by them
         self.prefill_tokens = 0      # real (non-padded) positions prefilled
         self.prefill_wall_s = 0.0    # settled wall time inside advance()
+        self.scatter_calls = 0       # prefill-lane -> grid-slot scatters
         self.admitted = 0            # requests bound to a prefill lane
+        # live view of the prefill runtime's compiled-shape count (the
+        # engine wires a callable so snapshots can spot a recompile
+        # regression without serve_bench's out-of-band bookkeeping; a
+        # fresh window after reset_metrics still reads the true
+        # cumulative count)
+        self.compiled_shapes_fn: Callable[[], int] | None = None
         # wall time decode-ready slots sat idle while admission chunks
         # ran — what the engine's chunk_budget bounds per step
         self.admission_stall_s = 0.0
@@ -117,6 +124,9 @@ class ServerMetrics:
 
     def note_decode_step(self) -> None:
         self.decode_steps += 1
+
+    def note_scatter(self) -> None:
+        self.scatter_calls += 1
 
     def note_admission_stall(self, seconds: float) -> None:
         self.admission_stall_s += seconds
@@ -207,6 +217,15 @@ class ServerMetrics:
             "decode_tok_per_s": gen / decode_wall,
             "device_calls_per_admission": (
                 self.prefill_batches / self.admitted if self.admitted else 0.0
+            ),
+            # cumulative device-call + compiled-shape counters: /metrics
+            # alone is enough to spot a recompile or dispatch regression
+            "scatter_calls": self.scatter_calls,
+            "device_calls": (self.decode_steps + self.prefill_batches
+                             + self.scatter_calls),
+            "prefill_compiled_shapes": (
+                self.compiled_shapes_fn() if self.compiled_shapes_fn
+                is not None else None
             ),
             "admission_stall_ms": 1e3 * self.admission_stall_s,
             "generated_tokens": gen,

@@ -1,0 +1,35 @@
+"""Observability for the fused serving engine (DESIGN.md §6.5).
+
+``trace``          — ring-buffered step tracer: per-device-call events
+                     (wall + settled time, dispatch gap, grid occupancy,
+                     chunk validity) and request-lifecycle spans;
+                     Chrome-trace/Perfetto export + aggregate summaries.
+``prometheus``     — Prometheus text exposition of
+                     ``ServerMetrics.snapshot()`` (Accept-negotiated on
+                     ``GET /metrics``).
+``kernel_profile`` — achieved-vs-roofline timing of the serving Pallas
+                     kernels at serving shapes.
+"""
+from repro.serving.obs.kernel_profile import (
+    KERNELS,
+    format_table,
+    profile_kernel,
+    profile_serving_kernels,
+    serving_shapes,
+    validate_profile,
+)
+from repro.serving.obs.prometheus import render as render_prometheus
+from repro.serving.obs.trace import DeviceCallEvent, RequestEvent, Tracer
+
+__all__ = [
+    "DeviceCallEvent",
+    "KERNELS",
+    "RequestEvent",
+    "Tracer",
+    "format_table",
+    "profile_kernel",
+    "profile_serving_kernels",
+    "render_prometheus",
+    "serving_shapes",
+    "validate_profile",
+]

@@ -1,0 +1,143 @@
+"""Prometheus text exposition for ``ServerMetrics.snapshot()``.
+
+``GET /metrics`` negotiates on the ``Accept`` header: JSON stays the
+default (every existing client keeps working), but ``text/plain`` or
+``application/openmetrics-text`` answers Prometheus exposition format
+0.0.4 — ``# HELP`` / ``# TYPE`` comments, one ``name{labels} value``
+sample per line — rendered straight from the same snapshot dict, so the
+two representations can never disagree.
+
+No prometheus_client dependency (the container bakes none): the format
+is lines of text with three escape sequences in label values
+(``\\`` -> ``\\\\``, ``"`` -> ``\\"``, newline -> ``\\n``), which
+:func:`escape_label` implements and the tests' parser round-trips.
+"""
+from __future__ import annotations
+
+import math
+
+PREFIX = "repro"
+
+# (snapshot key, metric name suffix, type, help)
+_ENGINE_FIELDS = (
+    ("generated_tokens", "generated_tokens_total", "counter",
+     "Tokens generated across all instances"),
+    ("decode_steps", "decode_steps_total", "counter",
+     "Fused (M,B)-grid decode+sample device calls"),
+    ("prefill_batches", "prefill_chunk_calls_total", "counter",
+     "Prefill chunk/tail device calls"),
+    ("prefill_tokens", "prefill_tokens_total", "counter",
+     "Real (non-padded) prompt positions prefilled"),
+    ("device_calls", "device_calls_total", "counter",
+     "All device calls: decode steps + prefill chunks + slot scatters"),
+    ("scatter_calls", "scatter_calls_total", "counter",
+     "Prefill-lane -> grid-slot scatter device calls"),
+    ("prefill_compiled_shapes", "prefill_compiled_shapes", "gauge",
+     "Distinct compiled prefill shapes (a rise mid-run is a recompile)"),
+    ("cancelled", "cancelled_total", "counter",
+     "Requests cancelled/expired across all instances"),
+    ("rejected", "rejected_total", "counter",
+     "Requests rejected at submit-time validation"),
+    ("tok_per_s", "tokens_per_second", "gauge",
+     "Aggregate generation throughput over the metrics window"),
+    ("prefill_tok_per_s", "prefill_tokens_per_second", "gauge",
+     "Prefill throughput over settled admission wall time"),
+    ("decode_tok_per_s", "decode_tokens_per_second", "gauge",
+     "Decode throughput over non-prefill wall time"),
+    ("admission_stall_ms", "admission_stall_ms_total", "counter",
+     "Wall time decode-ready slots waited on admission chunks"),
+    ("wall_s", "window_seconds", "gauge",
+     "Age of the metrics window"),
+)
+
+_INSTANCE_FIELDS = (
+    ("submitted", "instance_submitted_total", "counter"),
+    ("admitted", "instance_admitted_total", "counter"),
+    ("completed", "instance_completed_total", "counter"),
+    ("cancelled", "instance_cancelled_total", "counter"),
+    ("rejected", "instance_rejected_total", "counter"),
+    ("queue_depth", "instance_queue_depth", "gauge"),
+    ("queue_peak", "instance_queue_peak", "gauge"),
+    ("prompt_tokens", "instance_prompt_tokens_total", "counter"),
+    ("generated_tokens", "instance_generated_tokens_total", "counter"),
+    ("tok_per_s", "instance_tokens_per_second", "gauge"),
+)
+
+_QUANTILES = (("p50", "0.5"), ("p95", "0.95"), ("p99", "0.99"))
+
+
+def escape_label(value) -> str:
+    """Prometheus label-value escaping: backslash, double quote, newline."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _num(v) -> str:
+    if v is None:
+        return "NaN"
+    v = float(v)
+    if math.isnan(v):
+        return "NaN"
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(v) if not v.is_integer() else str(int(v))
+
+
+def _sample(name: str, labels: dict, value) -> str:
+    if labels:
+        body = ",".join(
+            f'{k}="{escape_label(v)}"' for k, v in labels.items())
+        return f"{PREFIX}_{name}{{{body}}} {_num(value)}"
+    return f"{PREFIX}_{name} {_num(value)}"
+
+
+def render(snapshot: dict, *, extra_labels: dict | None = None) -> str:
+    """Render a ``ServerMetrics.snapshot()`` dict as Prometheus text
+    exposition (format 0.0.4).  ``extra_labels`` (e.g. mesh geometry)
+    attach to every sample."""
+    base = dict(extra_labels or {})
+    lines: list[str] = []
+
+    def head(name, typ, hlp):
+        lines.append(f"# HELP {PREFIX}_{name} {hlp}")
+        lines.append(f"# TYPE {PREFIX}_{name} {typ}")
+
+    for key, name, typ, hlp in _ENGINE_FIELDS:
+        if key not in snapshot:
+            continue
+        head(name, typ, hlp)
+        lines.append(_sample(name, base, snapshot[key]))
+
+    for block, name in (("ttft_ms", "ttft_milliseconds"),
+                        ("itl_ms", "itl_milliseconds")):
+        head(name, "summary", f"{block} quantiles over the sample window")
+        d = snapshot.get(block)
+        for pkey, q in _QUANTILES:
+            lines.append(_sample(
+                name, {**base, "quantile": q},
+                d[pkey] if d is not None else None))
+
+    insts = snapshot.get("instances", ())
+    for key, name, typ in _INSTANCE_FIELDS:
+        head(name, typ, f"Per-instance {key}")
+        for i, st in enumerate(insts):
+            lines.append(_sample(name, {**base, "instance": i}, st[key]))
+    for block, name in (("ttft_ms", "instance_ttft_milliseconds"),
+                        ("itl_ms", "instance_itl_milliseconds")):
+        head(name, "summary", f"Per-instance {block} quantiles")
+        for i, st in enumerate(insts):
+            d = st.get(block)
+            for pkey, q in _QUANTILES:
+                lines.append(_sample(
+                    name, {**base, "instance": i, "quantile": q},
+                    d[pkey] if d is not None else None))
+
+    mesh = snapshot.get("mesh")
+    if mesh is not None:
+        head("mesh_devices", "gauge", "Devices in the serving mesh")
+        lines.append(_sample(
+            "mesh_devices",
+            {**base, "shape": "x".join(
+                f"{k}={v}" for k, v in mesh["shape"].items())},
+            mesh["devices"]))
+    return "\n".join(lines) + "\n"

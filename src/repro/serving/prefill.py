@@ -96,6 +96,7 @@ class ChunkedPrefill:
         rules=None,
         tail_fold: bool = True,
         donate: bool | None = None,
+        tracer=None,
     ):
         if cfg.family not in SERVABLE:
             raise ValueError(f"family {cfg.family!r} is not servable")
@@ -103,6 +104,9 @@ class ChunkedPrefill:
         self.family = cfg.family
         self.max_context = max_context
         self.metrics = metrics
+        # step tracer (engine-owned; None for standalone use) — call
+        # sites guard on ``tracer.enabled`` so the off path is free
+        self.tracer = tracer
         self.lanes = max(1, lanes)
         # tail folding: pad the final chunk to the full chunk width with
         # per-position validity masks instead of issuing up to chunk-1
@@ -253,12 +257,14 @@ class ChunkedPrefill:
 
     # -- the chunk pump ------------------------------------------------------
 
-    def advance(self, params, budget: int) -> list[tuple[Request, PrefillOut]]:
+    def advance(self, params, budget: int,
+                step: int = 0) -> list[tuple[Request, PrefillOut]]:
         """Run up to ``budget`` chunk device calls; return the requests
         whose prefill completed (with their PrefillOut rows of the shared
         carry tree).  Under donation the returned rows alias the live
         carry, which the NEXT advance updates in place — consume (scatter)
-        them before advancing again, as the engine does."""
+        them before advancing again, as the engine does.  ``step`` tags
+        trace events with the engine's step counter."""
         done: list[tuple[Request, PrefillOut]] = []
         # zero-work lanes (single-token prompts of prefix-less families)
         # complete immediately from the pristine init carry — their grid
@@ -287,7 +293,8 @@ class ChunkedPrefill:
                                 if self._lanes[i].total > self._lanes[i].next_pos]
                     if not workable:
                         break
-                    self._step(params, workable, self.chunk, fold=True)
+                    self._step(params, workable, self.chunk, fold=True,
+                               step=step)
                 else:
                     chunkable = [i for i in busy
                                  if self._lanes[i].total - self._lanes[i].next_pos >= self.chunk]
@@ -303,7 +310,7 @@ class ChunkedPrefill:
                     self._tail_turn = not run_tail
                     workable = tailable if run_tail else chunkable
                     c = 1 if run_tail else self.chunk
-                    self._step(params, workable, c)
+                    self._step(params, workable, c, step=step)
                 stepped = True
                 budget -= 1
                 for i in busy:
@@ -325,7 +332,8 @@ class ChunkedPrefill:
             out.cache = self._carry["cache"]
         return zero_done + done
 
-    def _step(self, params, workable: list[int], c: int, fold: bool = False) -> None:
+    def _step(self, params, workable: list[int], c: int, fold: bool = False,
+              step: int = 0) -> None:
         k = self.lanes
         toks = np.zeros((k, 1, c), np.int32)
         inst = np.zeros((k,), np.int32)
@@ -363,11 +371,27 @@ class ChunkedPrefill:
                 if lane.req is not None and lane.total > 0:
                     limit[i, 0] = moe.capacity(self.cfg, lane.total)
             extras["moe_limit"] = jnp.asarray(limit)
+        tr = self.tracer
+        trace_on = tr is not None and tr.enabled
+        if trace_on:
+            t0 = time.perf_counter()
         self._carry = self._fn(c)(
             params, jnp.asarray(inst), jnp.asarray(toks), self._carry,
             jnp.asarray(offset), jnp.asarray(valid), jnp.asarray(fresh), extras,
         )
         self.device_calls += 1
+        if trace_on:
+            t_dispatch = time.perf_counter()
+            # settling per chunk is a tracing-ON cost: it buys the true
+            # per-call device time in the trace; the untraced path keeps
+            # its async dispatch (one settle per advance)
+            jax.block_until_ready(self._carry)
+            tr.device_call(
+                "prefill_chunk", t0, t_dispatch, time.perf_counter(),
+                step=step, lanes_busy=self.in_flight(), lanes=self.lanes,
+                valid_frac=tokens_done / (len(workable) * c) if workable else 1.0,
+                tokens=tokens_done,
+            )
         if self.metrics is not None:
             self.metrics.note_prefill_batch(len(workable), tokens_done)
 

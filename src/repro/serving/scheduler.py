@@ -111,6 +111,11 @@ class Scheduler:
     def depth(self, instance: int) -> int:
         return len(self.queues[instance])
 
+    def depths(self) -> list[int]:
+        """Per-instance queue depths (one read for /healthz and trace
+        events, instead of m depth() calls)."""
+        return [len(q) for q in self.queues]
+
     def total_pending(self) -> int:
         return sum(len(q) for q in self.queues)
 

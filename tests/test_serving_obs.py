@@ -1,0 +1,593 @@
+"""Observability tests (ISSUE 6): step tracing, Prometheus exposition,
+kernel profiling, and the HTTP debug surface.
+
+The load-bearing contracts:
+
+* tracing OFF is free — call sites guard on ``tracer.enabled``, so the
+  disabled path runs NO tracer code at all (no event construction, no
+  locks, no clock reads inside the tracer) — asserted by making every
+  tracer method explode and draining a full workload,
+* tracing ON is invisible to results — traced greedy streams are
+  bit-identical to untraced ones (dense + recurrent, no-mesh and an
+  8-device mesh subprocess),
+* ``export_chrome()`` emits loadable Chrome-trace JSON: ``X`` slices
+  for device calls with dispatch/gap/occupancy args, request-lifecycle
+  spans correlated by request id, ``i`` instants at terminal stages,
+* the Prometheus rendering parses line-by-line (format 0.0.4) and its
+  label escaping round-trips,
+* ``ServerMetrics.snapshot()`` carries the cumulative device-call and
+  compiled-shape counters (and the latter survives ``reset_metrics``),
+* the HTTP layer negotiates /metrics on Accept, exposes
+  /debug/trace{,/start,/stop} + /metrics/reset, and /healthz flips to
+  503 when the driver task dies.
+"""
+import asyncio
+import json
+import os
+import re
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+import jax
+
+from repro import api
+from repro.configs import registry
+from repro.serving import AsyncEngine, MultiModelServer, Request, start_http_server
+from repro.serving.obs import (
+    Tracer,
+    profile_kernel,
+    profile_serving_kernels,
+    render_prometheus,
+    serving_shapes,
+    validate_profile,
+)
+from repro.serving.obs.prometheus import escape_label
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _build(arch, m=2):
+    cfg = registry.get_smoke_config(arch).with_(num_instances=m)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _server(cfg, params, **kw):
+    kw.setdefault("slots_per_instance", 2)
+    kw.setdefault("max_context", 48)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("prefill_chunk", 4)
+    return MultiModelServer(cfg, params, **kw)
+
+
+def _reqs():
+    return [
+        Request(instance=0, prompt=[1, 2, 3], max_new_tokens=4),
+        Request(instance=1, prompt=[4, 5], max_new_tokens=4),
+        Request(instance=0, prompt=[7], max_new_tokens=3),
+        Request(instance=1, prompt=[3, 3, 3, 3, 3], max_new_tokens=3),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# tracing off: literally no tracer code on the hot path
+# ---------------------------------------------------------------------------
+
+
+def test_tracing_off_runs_no_tracer_code(monkeypatch):
+    """With capture off, a full drain (submit, admit, prefill, scatter,
+    decode, finish, cancel) must never enter the tracer: every recording
+    method is replaced with a bomb."""
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+
+    def boom(*a, **k):
+        raise AssertionError("tracer code ran while capture was off")
+
+    monkeypatch.setattr(server.tracer, "device_call", boom)
+    monkeypatch.setattr(server.tracer, "request_event", boom)
+    monkeypatch.setattr(server.tracer, "_append", boom)
+    ids = [server.submit(r) for r in _reqs()]
+    # exercise the cancel call sites too (queued cancel)
+    extra = server.submit(Request(instance=0, prompt=[9, 9], max_new_tokens=2))
+    server.cancel(extra)
+    results = server.run_until_drained()
+    assert {r.request_id for r in results} == set(ids)
+    assert all(r.status == "ok" for r in results)
+    assert len(server.tracer) == 0
+
+
+# ---------------------------------------------------------------------------
+# tracing on: results are bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "xlstm-1.3b"])
+def test_traced_greedy_identical_to_untraced(arch):
+    cfg, params = _build(arch)
+    server = _server(cfg, params)
+
+    def drain():
+        ids = [server.submit(r) for r in _reqs()]
+        res = {r.request_id: r.tokens for r in server.run_until_drained()}
+        return [res[i] for i in ids]
+
+    want = drain()
+    server.tracer.start()
+    got = drain()
+    server.tracer.stop()
+    assert got == want
+    assert len(server.tracer) > 0
+
+
+def test_traced_async_streams_identical_to_untraced_sync():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+    for r in _reqs():
+        server.submit(r)
+    want = sorted(r.tokens for r in server.run_until_drained())
+
+    async def run():
+        engine = AsyncEngine(server)
+        await engine.set_tracing(True)
+
+        async def client(r):
+            s = await engine.submit(r)
+            toks = [t async for t in s]
+            assert (await s.result()).tokens == toks
+            return toks
+
+        out = await asyncio.gather(*(client(r) for r in _reqs()))
+        stopped = await engine.set_tracing(False)
+        await engine.aclose()
+        return out, stopped
+
+    got, stopped = asyncio.run(run())
+    assert sorted(got) == want
+    assert stopped["tracing"] is False
+    assert stopped["summary"]["decode_steps"] > 0
+
+
+@pytest.mark.slow
+def test_traced_streams_identical_under_mesh():
+    """Tracing must be result-invisible on the sharded path too: an
+    8-CPU-device (data=2, model=4) mesh drain with capture on equals
+    the untraced no-mesh baseline, and the capture still carries
+    decode/prefill/scatter events (subprocess harness as in
+    test_serving_sharded.py)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import numpy as np
+        from repro import api
+        from repro.configs import registry
+        from repro.models import common as C
+        from repro.serving import MultiModelServer, Request
+
+        assert len(jax.devices()) == 8, jax.devices()
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        M = 2
+
+        def build(arch):
+            cfg1 = registry.get_smoke_config(arch).with_(
+                num_instances=1, dtype="float32", param_dtype="float32")
+            cfg = cfg1.with_(num_instances=M)
+            keys = jax.random.split(jax.random.PRNGKey(0), M)
+            merged = C.merge_instances(
+                [api.init(cfg1, k) for k in keys], api.axes(cfg1))
+            return cfg, merged
+
+        def mk_reqs(cfg, n=5, max_new=4):
+            rng = np.random.default_rng(0)
+            return [Request(instance=i % M,
+                            prompt=rng.integers(1, cfg.vocab_size,
+                                size=int(rng.integers(2, 8))).tolist(),
+                            max_new_tokens=max_new) for i in range(n)]
+
+        def drain(server, reqs, traced):
+            if traced:
+                server.tracer.start()
+            for r in reqs:
+                server.submit(r)
+            out = {r.request_id: r.tokens for r in server.run_until_drained()}
+            if traced:
+                server.tracer.stop()
+            return out
+
+        for arch in ("tinyllama-1.1b", "xlstm-1.3b"):
+            cfg, merged = build(arch)
+            plain = MultiModelServer(cfg, merged, slots_per_instance=2,
+                                     max_context=64, prefill_chunk=4)
+            want = drain(plain, mk_reqs(cfg), traced=False)
+            assert all(want.values())
+            meshed = MultiModelServer(cfg, merged, slots_per_instance=2,
+                                      max_context=64, prefill_chunk=4,
+                                      mesh=mesh)
+            got = drain(meshed, mk_reqs(cfg), traced=True)
+            assert got == want, (arch, got, want)
+            s = meshed.tracer.summary()
+            assert s["decode_steps"] > 0 and s["prefill_chunks"] > 0
+            assert s["scatters"] > 0
+            print(arch, "traced mesh streams OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=REPO, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "xlstm-1.3b traced mesh streams OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace export schema
+# ---------------------------------------------------------------------------
+
+
+def test_export_chrome_schema_and_json_roundtrip():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+    server.tracer.start()
+    for r in _reqs():
+        server.submit(r)
+    server.run_until_drained()
+    server.tracer.stop()
+    trace = json.loads(json.dumps(server.tracer.export_chrome()))
+
+    assert trace["displayTimeUnit"] == "ms"
+    assert trace["otherData"]["dropped_events"] == 0
+    events = trace["traceEvents"]
+    assert isinstance(events, list) and events
+
+    device = [e for e in events if e["ph"] == "X" and e["pid"] == 0]
+    spans = [e for e in events if e["ph"] == "X" and e["pid"] == 1]
+    instants = [e for e in events if e["ph"] == "i"]
+    meta = [e for e in events if e["ph"] == "M"]
+    assert {e["name"] for e in device} == {"decode", "prefill_chunk",
+                                           "scatter"}
+    for e in device:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+        args = e["args"]
+        for k in ("step", "dispatch_ms", "settled_ms", "gap_ms",
+                  "active_slots", "slot_capacity", "occupancy"):
+            assert k in args, (e["name"], k)
+        assert 0.0 <= args["occupancy"] <= 1.0
+    decode_args = [e["args"] for e in device if e["name"] == "decode"]
+    assert any(a["active_slots"] > 0 for a in decode_args)
+    assert all(a["slot_capacity"] == server.m * server.b
+               for a in decode_args)
+
+    # every request leaves spans on its own track, ending in a terminal
+    # instant; the full lifecycle (multi-chunk prompt) names all three
+    rids = {e["tid"] for e in spans}
+    assert len(rids) == len(_reqs())
+    assert {e["name"] for e in instants} == {"finish:ok"}
+    by_rid = {}
+    for e in spans:
+        by_rid.setdefault(e["tid"], []).append(e["name"])
+    assert any(set(v) == {"queued", "prefill", "decode"}
+               for v in by_rid.values()), by_rid
+    # process/thread naming metadata for the two trace processes
+    assert {(e["name"], e.get("pid")) for e in meta} >= {
+        ("process_name", 0), ("process_name", 1), ("thread_name", 0)}
+
+
+def test_tracer_ring_bounds_memory_and_counts_drops():
+    tr = Tracer(capacity=2, clock=lambda: 0.0)
+    tr.start()
+    for i in range(5):
+        tr.device_call("decode", 0.0, 0.0, 0.0, step=i)
+    assert len(tr) == 2
+    assert tr.dropped == 3
+    assert tr.export_chrome()["otherData"]["dropped_events"] == 3
+    tr.start()                      # restart clears the window
+    assert len(tr) == 0 and tr.dropped == 0
+
+
+def test_summary_aggregates_from_synthetic_events():
+    tr = Tracer(clock=lambda: 0.0)
+    tr.start()                                    # epoch = 0.0
+    tr.device_call("decode", 1.00, 1.01, 1.05, step=0, active=2, capacity=4)
+    tr.device_call("decode", 1.10, 1.11, 1.15, step=1, active=4, capacity=4)
+    tr.device_call("prefill_chunk", 1.20, 1.21, 1.25, step=2,
+                   lanes_busy=1, lanes=4, valid_frac=0.5, tokens=8)
+    tr.device_call("scatter", 1.30, 1.31, 1.35, step=2)
+    s = tr.summary()
+    assert s["device_calls"] == 4
+    assert s["decode_steps"] == 2
+    assert s["prefill_chunks"] == 1
+    assert s["scatters"] == 1
+    # gaps: 0 (first), 1.10-1.05, 1.20-1.15, 1.30-1.25 -> 0/50/50/50 ms
+    assert s["dispatch_overhead_ms"]["p95"] == pytest.approx(50.0)
+    assert s["mean_dispatch_gap_ms"] == pytest.approx(37.5)
+    assert s["mean_grid_occupancy"] == pytest.approx(0.75)
+    assert s["idle_slot_token_steps"] == 2
+    assert s["mean_prefill_lane_occupancy"] == pytest.approx(0.25)
+    assert s["mean_chunk_validity"] == pytest.approx(0.5)
+
+
+def test_request_spans_from_synthetic_lifecycle():
+    times = iter([0.0, 1.0, 2.0, 3.0, 4.0])
+    tr = Tracer(clock=lambda: next(times))
+    tr.start()                                    # epoch = 0.0
+    tr.request_event(7, "submit", instance=1)
+    tr.request_event(7, "admit", instance=1)
+    tr.request_event(7, "prefill_done", instance=1)
+    tr.request_event(7, "finish", instance=1, status="ok")
+    ev = tr.export_chrome()["traceEvents"]
+    spans = {e["name"]: e for e in ev if e["ph"] == "X"}
+    assert set(spans) == {"queued", "prefill", "decode"}
+    assert spans["queued"]["ts"] == pytest.approx(1e6)
+    assert spans["queued"]["dur"] == pytest.approx(1e6)
+    assert spans["decode"]["dur"] == pytest.approx(1e6)
+    assert [e["name"] for e in ev if e["ph"] == "i"] == ["finish:ok"]
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+# ---------------------------------------------------------------------------
+
+# one sample line: name{labels} value — label values are quoted strings
+# with \\ \" \n escapes; value is a float, integer, NaN or +/-Inf
+_SAMPLE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{((?:[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*",?)*)\})?'
+    r' (NaN|[+-]Inf|[+-]?[0-9.eE+-]+)$')
+
+
+def test_prometheus_exposition_parses_line_by_line():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+    for r in _reqs():
+        server.submit(r)
+    server.run_until_drained()
+    text = render_prometheus(server.metrics.snapshot())
+
+    typed = {}
+    samples = {}
+    for line in text.strip().split("\n"):
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, typ = line.split(" ", 3)
+            assert typ in ("counter", "gauge", "summary"), line
+            typed[name] = typ
+            continue
+        m = _SAMPLE.match(line)
+        assert m, f"unparseable sample line: {line!r}"
+        samples.setdefault(m.group(1), []).append(m.group(3))
+    # every sample was declared, every declared family has samples
+    assert set(samples) == set(typed)
+    gen = sum(r.max_new_tokens for r in _reqs())
+    assert samples["repro_generated_tokens_total"] == [str(gen)]
+    assert samples["repro_device_calls_total"][0].isdigit()
+    assert int(samples["repro_device_calls_total"][0]) > 0
+    assert samples["repro_prefill_compiled_shapes"] == ["1"]
+    # per-instance families carry one sample per instance; summaries
+    # carry one per quantile
+    assert len(samples["repro_instance_completed_total"]) == server.m
+    assert len(samples["repro_ttft_milliseconds"]) == 3
+
+
+def test_prometheus_label_escaping_roundtrips():
+    assert escape_label('a\\b"c\nd') == 'a\\\\b\\"c\\nd'
+    nasty = {'path': 'a\\b"c\nd', 'plain': 'ok'}
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+    text = render_prometheus(server.metrics.snapshot(), extra_labels=nasty)
+    line = next(l for l in text.split("\n")
+                if l.startswith("repro_generated_tokens_total{"))
+    m = _SAMPLE.match(line)
+    assert m, line
+    # unescape the label block and recover the original values
+    labels = dict(re.findall(r'([a-zA-Z_]+)="((?:[^"\\]|\\.)*)"', m.group(2)))
+    unescape = lambda s: (s.replace("\\n", "\n").replace('\\"', '"')
+                          .replace("\\\\", "\\"))
+    assert unescape(labels["path"]) == nasty["path"]
+    assert labels["plain"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# snapshot counters + reset semantics
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_device_call_and_compiled_shape_counters():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+    for r in _reqs():
+        server.submit(r)
+    results = server.run_until_drained()
+    snap = server.metrics.snapshot()
+    assert snap["scatter_calls"] == len(results)
+    assert snap["device_calls"] == (snap["decode_steps"]
+                                    + snap["prefill_batches"]
+                                    + snap["scatter_calls"])
+    assert snap["device_calls"] > 0
+    assert snap["prefill_compiled_shapes"] == 1   # tail folding: one shape
+    # the compiled-shape gauge reads through to the live prefill runtime,
+    # so a reset window still reports the true cumulative count
+    server.reset_metrics()
+    snap2 = server.metrics.snapshot()
+    assert snap2["generated_tokens"] == 0
+    assert snap2["device_calls"] == 0
+    assert snap2["prefill_compiled_shapes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface
+# ---------------------------------------------------------------------------
+
+
+async def _req_http(port, method, path, headers=None, payload=None):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = b"" if payload is None else json.dumps(payload).encode()
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
+    writer.write(
+        f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+        f"Content-Length: {len(body)}\r\n{extra}\r\n".encode() + body)
+    await writer.drain()
+    raw = await reader.read()
+    writer.close()
+    await writer.wait_closed()
+    head, _, rest = raw.partition(b"\r\n\r\n")
+    head = head.decode("latin-1")
+    status = int(head.split()[1])
+    ctype = next((l.split(":", 1)[1].strip() for l in head.split("\r\n")
+                  if l.lower().startswith("content-type")), "")
+    return status, ctype, rest
+
+
+def test_http_observability_routes():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+
+    async def run():
+        async with AsyncEngine(server) as engine:
+            http = await start_http_server(engine, port=0)
+            port = http.sockets[0].getsockname()[1]
+
+            st, _, body = await _req_http(port, "GET", "/healthz")
+            h = json.loads(body)
+            assert st == 200 and h["status"] == "ok"
+            assert h["driver"] == "running"
+            assert h["in_flight"] == 0 and h["queue_depths"] == [0, 0]
+            assert h["tracing"] is False
+
+            st, _, body = await _req_http(port, "POST", "/debug/trace/start")
+            assert st == 200 and json.loads(body) == {"tracing": True}
+
+            st, _, body = await _req_http(
+                port, "POST", "/v1/completions",
+                payload={"model": 0, "prompt": [1, 2, 3], "max_tokens": 4})
+            assert st == 200
+            toks = json.loads(body)["choices"][0]["tokens"]
+            assert len(toks) == 4
+
+            st, ct, body = await _req_http(port, "GET", "/debug/trace")
+            trace = json.loads(body)
+            assert st == 200 and ct == "application/json"
+            assert any(e.get("name") == "decode"
+                       for e in trace["traceEvents"])
+
+            st, _, body = await _req_http(port, "POST", "/debug/trace/stop")
+            stop = json.loads(body)
+            assert st == 200 and stop["tracing"] is False
+            assert stop["summary"]["decode_steps"] >= 4
+
+            # Accept negotiation: text/plain -> Prometheus, default JSON
+            st, ct, body = await _req_http(port, "GET", "/metrics",
+                                           headers={"Accept": "text/plain"})
+            assert st == 200
+            assert ct == "text/plain; version=0.0.4; charset=utf-8"
+            assert b"# TYPE repro_generated_tokens_total counter" in body
+            st, ct, body = await _req_http(port, "GET", "/metrics")
+            assert ct == "application/json"
+            snap = json.loads(body)
+            assert snap["generated_tokens"] == 4
+
+            st, _, _ = await _req_http(port, "POST", "/metrics/reset")
+            assert st == 200
+            _, _, body = await _req_http(port, "GET", "/metrics")
+            assert json.loads(body)["generated_tokens"] == 0
+
+            # wrong methods answer 405, not 404
+            for method, path in (("GET", "/metrics/reset"),
+                                 ("GET", "/debug/trace/start"),
+                                 ("POST", "/debug/trace"),
+                                 ("POST", "/healthz")):
+                st, _, _ = await _req_http(port, method, path)
+                assert st == 405, (method, path)
+
+            http.close()
+            await http.wait_closed()
+
+    asyncio.run(run())
+
+
+def test_healthz_503_when_driver_dies():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+
+    async def run():
+        engine = AsyncEngine(server)
+        http = await start_http_server(engine, port=0)
+        port = http.sockets[0].getsockname()[1]
+
+        def explode():
+            raise RuntimeError("injected step failure")
+
+        server.step = explode
+        stream = await engine.submit(
+            Request(instance=0, prompt=[1, 2], max_new_tokens=2))
+        res = await stream.result()
+        assert res.status == "cancelled"
+        assert "driver failed" in res.error
+
+        st, _, body = await _req_http(port, "GET", "/healthz")
+        h = json.loads(body)
+        assert st == 503
+        assert h["status"] == "error" and h["driver"] == "failed"
+
+        http.close()
+        await http.wait_closed()
+        with pytest.raises(RuntimeError):
+            await engine.aclose()
+
+    asyncio.run(run())
+
+
+def test_run_in_step_gap_without_running_driver():
+    """reset/tracing toggles must work before any request ever started
+    the driver (direct-call fallback)."""
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+
+    async def run():
+        engine = AsyncEngine(server)
+        on = await engine.set_tracing(True)
+        off = await engine.set_tracing(False)
+        await engine.reset_metrics()
+        await engine.aclose()
+        return on, off
+
+    on, off = asyncio.run(run())
+    assert on == {"tracing": True}
+    assert off["tracing"] is False
+
+
+# ---------------------------------------------------------------------------
+# kernel profiling
+# ---------------------------------------------------------------------------
+
+
+def test_profile_serving_kernels_smoke():
+    cfg = registry.get_smoke_config("tinyllama-1.1b").with_(num_instances=2)
+    rows = profile_serving_kernels(cfg, slots=2, max_context=32, chunk=8,
+                                   prefill_lanes=2, repeats=1)
+    validate_profile(rows)
+    assert [r["kernel"] for r in rows] == [
+        "fused_matmul", "decode_attn", "chunk_prefill_attn",
+        "mlstm_chunk", "slstm_cell"]
+    for r in rows:
+        assert r["bound"] in ("compute", "memory")
+        assert r["backend"] == jax.default_backend()
+        if r["backend"] != "tpu":
+            assert r["interpret"] is True
+
+
+def test_serving_shapes_handle_zero_dff_configs():
+    """xlstm smoke configs carry d_ff=0 (no MLP): shape derivation must
+    fall back, not divide by zero (the bug the first profiling run
+    hit)."""
+    cfg = registry.get_smoke_config("xlstm-1.3b").with_(num_instances=2)
+    shapes = serving_shapes(cfg, slots=2, max_context=32, chunk=8,
+                            prefill_lanes=2)
+    assert shapes["fused_matmul"]["f"] > 0
+    assert shapes["mlstm_chunk"]["hd"] > 0
+    assert shapes["slstm_cell"]["d"] > 0
+    row = profile_kernel("fused_matmul", dtype=cfg.dtype, repeats=1,
+                         **shapes["fused_matmul"])
+    validate_profile([row])
