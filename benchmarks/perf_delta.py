@@ -48,6 +48,18 @@ _SERVE_METRICS = (
     ("sequential tok/s", ("sequential", "tok_per_s"), True),
     ("speedup (seq/fused wall)", ("speedup",), True),
     ("dispatch amortization", ("dispatch_amortization",), True),
+    # multi-step decode (DESIGN.md §6.6) — absent in pre-PR-7 records
+    ("fused tokens/device-call", ("fused", "tokens_per_device_call"), True),
+    ("decode tok/s @K8 (no mesh)",
+     ("decode_horizon", "no_mesh", "per_k", "8", "decode_tok_per_s"), True),
+    ("decode tok/s @K1 (no mesh)",
+     ("decode_horizon", "no_mesh", "per_k", "1", "decode_tok_per_s"), True),
+    ("K8 vs K1 decode speedup", ("k8_vs_k1_decode_speedup",), True),
+    ("K8 vs K1 call reduction", ("k8_vs_k1_call_reduction",), True),
+    ("K8 vs K1 dispatch/token reduction",
+     ("k8_vs_k1_dispatch_per_token_reduction",), True),
+    ("dispatch overhead/token (ms)",
+     ("obs", "dispatch_overhead_per_token_ms"), False),
     ("dispatch overhead p50 (ms)", ("dispatch_overhead_ms", "p50"), False),
     ("dispatch overhead p95 (ms)", ("dispatch_overhead_ms", "p95"), False),
     ("mean grid occupancy", ("mean_grid_occupancy",), True),

@@ -33,6 +33,20 @@ throttling the offered load.  The run streams through the
 inter-token-latency p50/p95/p99 to the record (``load_gen`` section) —
 validated finite like every other throughput field.
 
+Decode-horizon sweep (``decode_horizon`` section, DESIGN.md §6.6): the
+same fused workload served at K ∈ {1, 2, 4, 8} decode steps per device
+call — on BOTH the no-mesh and the mesh path when serving sharded —
+recording per-K decode throughput (over the blocks' own settled
+dispatch->host wall), decode device calls, tokens per device call,
+host dispatch ms per token, and speedup vs the sequential baseline.
+Two amortization figures fall out: ``k8_vs_k1_decode_speedup`` (the
+end-to-end decode-wall ratio — on CPU hosts the in-scan per-step
+compute dominates the ~0.3 ms amortizable dispatch, so expect well
+under K; dispatch-bound accelerator backends approach K) and
+``k8_vs_k1_dispatch_per_token_reduction`` (the dispatch slice itself,
+~K-fold anywhere).  The headline fused pass runs at ``--decode-steps``
+(default 8).
+
 Observability (``obs`` section, DESIGN.md §6.5): a step-traced pass
 records per-device-call dispatch overhead p50/p95/p99, mean grid
 occupancy, idle-slot token-steps and the tracing on/off throughput A/B;
@@ -99,7 +113,8 @@ def _timed_pass(server, reqs) -> dict:
     throughput split, admission device-call counts, stall."""
     met = server.metrics
     base = (met.prefill_wall_s, met.prefill_tokens, met.prefill_batches,
-            met.admitted, met.admission_stall_s, server.steps)
+            met.admitted, met.admission_stall_s, server.steps,
+            met.decode_wall_s, met.decode_tokens)
     for r in reqs:
         server.submit(r)
     t0 = time.perf_counter()
@@ -110,6 +125,11 @@ def _timed_pass(server, reqs) -> dict:
     ptok = met.prefill_tokens - base[1]
     calls = met.prefill_batches - base[2]
     admitted = met.admitted - base[3]
+    # decode rate over the fused blocks' own settled device wall (the
+    # engine times every dispatch->host call) — scatter/scheduler/host
+    # time would otherwise dilute the multi-step dispatch amortization
+    dw = met.decode_wall_s - base[6]
+    dtok = met.decode_tokens - base[7]
     return {
         "requests": len(results),
         "tokens": gen,
@@ -118,7 +138,9 @@ def _timed_pass(server, reqs) -> dict:
         "prefill_tokens": ptok,
         "prefill_wall_s": pw,
         "prefill_tok_per_s": ptok / pw if pw > 0 else 0.0,
-        "decode_tok_per_s": gen / max(wall - pw, 1e-9),
+        "decode_tok_per_s": (dtok / dw if dw > 0
+                             else gen / max(wall - pw, 1e-9)),
+        "decode_wall_s": dw,
         "device_calls": calls,
         "device_calls_per_admission": calls / max(admitted, 1),
         "compiled_shapes": server.prefill.compiled_shapes,
@@ -152,16 +174,69 @@ def _fold_ab(cfg, merged, mesh, args, reqs) -> dict:
 
 def _mk_server(cfg, merged, mesh, args, **overrides) -> MultiModelServer:
     """The ONE construction point for every benchmark pass (fused,
-    fold A/B, load gen), so admission knobs can't silently diverge
-    between the variants under comparison."""
+    fold A/B, decode-horizon sweep, load gen), so admission knobs can't
+    silently diverge between the variants under comparison."""
     kw = dict(
         slots_per_instance=args.slots,
         max_context=args.resolved_max_context, temperature=0.0, mesh=mesh,
         prefill_chunk=args.chunk, chunk_budget=args.chunk_budget,
-        prefill_lanes=args.lanes,
+        prefill_lanes=args.lanes, decode_steps=args.decode_steps,
     )
     kw.update(overrides)
     return MultiModelServer(cfg, merged, **kw)
+
+
+_SWEEP_KS = (1, 2, 4, 8)
+
+
+def _decode_sweep(cfg, merged, mesh, args, reqs, seq_wall) -> dict:
+    """Decode-horizon A/B (DESIGN.md §6.6): the same workload served at
+    K ∈ {1, 2, 4, 8} fused decode steps per device call — fresh server
+    per K, compile warmup excluded from the timed pass — recording
+    decode throughput, decode device calls, tokens per device call, and
+    speedup vs the sequential baseline (streams are bit-identical
+    across K under this greedy config, so every pass serves the exact
+    same tokens)."""
+    out = {"ks": list(_SWEEP_KS), "per_k": {}}
+    mk = lambda: [Request(r.instance, list(r.prompt), r.max_new_tokens)
+                  for r in reqs]
+    for K in _SWEEP_KS:
+        server = _mk_server(cfg, merged, mesh, args, decode_steps=K)
+        _timed_pass(server, mk())          # compile warmup
+        met = server.metrics
+        base = (met.decode_calls, met.decode_steps, met.decode_tokens,
+                met.decode_dispatch_s)
+        d = _timed_pass(server, mk())
+        calls = met.decode_calls - base[0]
+        dtok = met.decode_tokens - base[2]
+        out["per_k"][str(K)] = {
+            "tok_per_s": d["tok_per_s"],
+            "decode_tok_per_s": d["decode_tok_per_s"],
+            "wall_s": d["wall_s"],
+            "decode_device_calls": calls,
+            "decode_scan_steps": met.decode_steps - base[1],
+            "tokens_per_device_call": dtok / max(calls, 1),
+            "dispatch_ms_per_token": (
+                1e3 * (met.decode_dispatch_s - base[3]) / max(dtok, 1)),
+            "speedup_vs_sequential": seq_wall / d["wall_s"],
+        }
+    k1 = out["per_k"]["1"]
+    k8 = out["per_k"][str(_SWEEP_KS[-1])]
+    # the tentpole acceptance figures.  decode_speedup is the honest
+    # settled-decode-wall ratio: on CPU hosts the in-scan per-step
+    # compute dominates the ~0.3 ms amortizable dispatch, so it lands
+    # well under K; dispatch_per_token_reduction isolates the dispatch
+    # slice itself, which drops ~K-fold wherever the block runs (and on
+    # dispatch-bound accelerator backends drags the wall ratio with it)
+    out["k8_vs_k1_decode_speedup"] = (
+        k8["decode_tok_per_s"] / k1["decode_tok_per_s"]
+        if k1["decode_tok_per_s"] > 0 else None)
+    out["k8_vs_k1_call_reduction"] = (
+        k1["decode_device_calls"] / max(k8["decode_device_calls"], 1))
+    out["k8_vs_k1_dispatch_per_token_reduction"] = (
+        k1["dispatch_ms_per_token"] / k8["dispatch_ms_per_token"]
+        if k8["dispatch_ms_per_token"] > 0 else None)
+    return out
 
 
 def _run_load_gen(cfg, merged, mesh, args, reqs) -> dict:
@@ -304,6 +379,28 @@ def validate_record(record: dict) -> None:
             continue
         for key in ("fold_off", "fold_on"):
             check(ab[key], f"tail_folding.{mesh_key}.{key}")
+    # decode-horizon sweep: every K's throughput and call counts must be
+    # present and finite, and the K=8 acceptance figures real numbers —
+    # a silent multi-step regression fails the bench (CI bench-smoke)
+    for mesh_key, sweep in record["decode_horizon"].items():
+        if sweep is None:
+            continue
+        for k in sweep["ks"]:
+            per = sweep["per_k"][str(k)]
+            where = f"decode_horizon.{mesh_key}.per_k.{k}"
+            for f in ("tok_per_s", "decode_tok_per_s",
+                      "tokens_per_device_call", "dispatch_ms_per_token",
+                      "speedup_vs_sequential"):
+                v = per[f]
+                assert isinstance(v, (int, float)) and _math.isfinite(v), (
+                    f"{where}: {f} is not finite: {v!r}")
+            assert per["decode_device_calls"] > 0, where
+            assert per["decode_scan_steps"] >= per["decode_device_calls"], where
+        for f in ("k8_vs_k1_decode_speedup", "k8_vs_k1_call_reduction",
+                  "k8_vs_k1_dispatch_per_token_reduction"):
+            v = sweep[f]
+            assert isinstance(v, (int, float)) and _math.isfinite(v), (
+                f"decode_horizon.{mesh_key}: {f} is not finite: {v!r}")
     lg = record["load_gen"]
     if lg is not None:
         assert _math.isfinite(lg["tok_per_s"]), lg["tok_per_s"]
@@ -362,6 +459,12 @@ def main():
                     help="max prefill chunk calls interleaved per engine step")
     ap.add_argument("--lanes", type=int, default=4,
                     help="concurrent prefill lanes (requests mid-admission)")
+    ap.add_argument("--decode-steps", type=int, default=8, metavar="K",
+                    help="decode steps fused per device call in the "
+                         "headline fused/fold/load-gen/obs passes "
+                         "(multi-step decode, DESIGN.md §6.6); the "
+                         "decode_horizon section sweeps K ∈ {1,2,4,8} "
+                         "regardless")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--clients", type=int, default=4,
                     help="concurrent async client tasks in the open-loop "
@@ -414,12 +517,19 @@ def main():
 
     def fused_run():
         steps0 = fused_server.steps
-        stall0 = fused_server.metrics.admission_stall_s
+        met = fused_server.metrics
+        base = (met.admission_stall_s, met.decode_calls, met.decode_steps,
+                met.decode_tokens)
         d = _drain(fused_server, [Request(r.instance, list(r.prompt), r.max_new_tokens)
                                   for r in reqs])
         d["decode_steps"] = fused_server.steps - steps0
-        d["admission_stall_ms"] = 1e3 * (
-            fused_server.metrics.admission_stall_s - stall0)
+        d["admission_stall_ms"] = 1e3 * (met.admission_stall_s - base[0])
+        # multi-step decode (DESIGN.md §6.6): dispatch-amortization view
+        calls = met.decode_calls - base[1]
+        d["decode_device_calls"] = calls
+        d["decode_scan_steps"] = met.decode_steps - base[2]
+        d["tokens_per_device_call"] = (
+            (met.decode_tokens - base[3]) / max(calls, 1))
         return d
 
     fused_run()                      # compile warmup
@@ -461,6 +571,14 @@ def main():
     tail_folding["mesh"] = (
         _fold_ab(cfg, merged, mesh, args, reqs) if mesh is not None else None
     )
+
+    # decode-horizon sweep: the multi-step tentpole's acceptance
+    # figures, on both paths when serving sharded (DESIGN.md §6.6)
+    decode_horizon = {
+        "no_mesh": _decode_sweep(cfg, merged, None, args, reqs, seq["wall_s"]),
+        "mesh": (_decode_sweep(cfg, merged, mesh, args, reqs, seq["wall_s"])
+                 if mesh is not None else None),
+    }
 
     # open-loop async load generation through the streaming frontend:
     # the section the TTFT/ITL tail-latency trajectory is tracked on
@@ -505,9 +623,11 @@ def main():
         "chunk_budget": fused_server.chunk_budget,
         "prefill_lanes": fused_server.prefill.lanes,
         "compiled_shapes": fused_server.prefill.compiled_shapes,
+        "decode_steps_per_call": args.decode_steps,
         "fused": fused,
         "sequential": seq,
         "tail_folding": tail_folding,
+        "decode_horizon": decode_horizon,
         "load_gen": load_gen,
         "obs": obs,
         # promoted to top level so perf_delta can diff the dispatch
@@ -521,6 +641,13 @@ def main():
         ),
         "speedup": seq["wall_s"] / fused["wall_s"],
         "dispatch_amortization": seq["decode_steps"] / max(fused["decode_steps"], 1),
+        # multi-step acceptance figures, promoted for perf_delta --serve
+        "k8_vs_k1_decode_speedup":
+            decode_horizon["no_mesh"]["k8_vs_k1_decode_speedup"],
+        "k8_vs_k1_call_reduction":
+            decode_horizon["no_mesh"]["k8_vs_k1_call_reduction"],
+        "k8_vs_k1_dispatch_per_token_reduction":
+            decode_horizon["no_mesh"]["k8_vs_k1_dispatch_per_token_reduction"],
     }
     validate_record(record)
     print(json.dumps(record, indent=2))

@@ -112,6 +112,11 @@ def main():
     ap.add_argument("--no-tail-fold", action="store_true",
                     help="disable padded-final-chunk tail folding (two "
                          "compiled shapes + per-token tail calls, for A/B)")
+    ap.add_argument("--decode-steps", type=int, default=1, metavar="K",
+                    help="fuse K decode+sample steps into one device call "
+                         "(multi-step decode, DESIGN.md §6.6; stop "
+                         "handling is on-device, streams are bit-identical "
+                         "to K=1 under greedy sampling)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -171,6 +176,7 @@ def main():
         scheduler=args.policy, prefill_chunk=args.chunk,
         prefill_lanes=args.lanes, chunk_budget=args.chunk_budget,
         tail_fold=not args.no_tail_fold, mesh=mesh,
+        decode_steps=args.decode_steps,
     )
     if args.http:
         _serve_http(server, args)
@@ -210,8 +216,11 @@ def main():
               f"grid occupancy {summ['mean_grid_occupancy']:.2f}"
               if do is not None else f"wrote {args.trace_out}")
     toks = sum(len(r.tokens) for r in results)
+    snap = server.metrics.snapshot()
     print(f"served {len(results)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s, {server.steps} fused decode steps, "
+          f"({toks/dt:.1f} tok/s, {snap['decode_steps']} fused decode steps "
+          f"in {server.steps} device calls @ K={args.decode_steps}, "
+          f"{snap['tokens_per_device_call']:.1f} tok/device-call, "
           f"policy={args.policy})")
     print(f"chunked prefill: chunk={server.prefill.chunk}, "
           f"tail_fold={'off' if args.no_tail_fold else 'on'}, "

@@ -234,6 +234,26 @@ def tree_select_lanes(mask, new_tree, old_tree, axes_tree):
                         is_leaf=_is_axes_tuple)
 
 
+def tree_select_slots(mask, new_tree, old_tree, axes_tree):
+    """Per-(instance, slot) merge of two grid cache trees: slot (m, b)
+    takes ``new_tree`` where ``mask[m, b]``, else keeps ``old_tree``.
+    The (M, B) mask lands on each leaf's adjacent ``instances``/``batch``
+    dims and broadcasts over the rest.  Used by the multi-step decode
+    scan (DESIGN.md §6.6): a lane that hits its stop condition mid-block
+    freezes — its cache rows stop advancing while live slots keep
+    decoding — so K=1 and K>1 greedy streams are bit-identical."""
+    mask = jnp.asarray(mask)
+
+    def _sel(ax, n, o):
+        i = ax.index("instances")
+        assert ax[i + 1] == "batch", ax   # grid leaves: instances then batch
+        mk = mask.reshape((1,) * i + mask.shape + (1,) * (n.ndim - i - 2))
+        return jnp.where(mk, n, o)
+
+    return jax.tree.map(_sel, axes_tree, new_tree, old_tree,
+                        is_leaf=_is_axes_tuple)
+
+
 # ---------------------------------------------------------------------------
 # misc
 # ---------------------------------------------------------------------------

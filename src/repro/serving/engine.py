@@ -22,6 +22,25 @@ of per-slot decode state and composes four subsystems:
   host round-trips,
 * ``metrics.py`` — per-instance throughput/latency/queue counters.
 
+Multi-step decode (DESIGN.md §6.6): the fused device call is a
+``lax.scan`` of up to ``decode_steps`` (K) decode+sample steps over the
+whole grid — ONE dispatch returns a (K, M, B) token block, amortizing
+per-launch overhead K-fold on top of the paper's M-fold merge.  Stop
+conditions live on-device: the scan carries a per-slot alive mask, and
+a lane that hits EOS / ``max_new_tokens`` / ``max_context`` mid-block
+freezes — its token and position stop advancing and its cache writes
+are masked (``tree_select_slots``, mirroring the tail-folding ``valid``
+machinery) — so K=1 and K>1 greedy streams are bit-identical per
+request.  The historical one-call-per-*step* invariant is thus now
+one-call-per-*block*: ``step()`` still makes exactly one fused decode
+dispatch, but unrolls the block on the host so per-token ``on_token``
+callbacks, metrics, scheduler accounting and finish detection keep
+their per-token semantics.  An adaptive policy shrinks the horizon
+(k=1 while prefill lanes are in flight; the largest power of two that
+no decoding slot overshoots while requests wait in queue) so
+multi-step decode never starves the chunked-prefill interleave or
+holds freed slots hostage — at most log2(K)+1 compiled block shapes.
+
 Mesh-parametric execution: pass ``mesh=`` (and optionally ``rules=``) to
 run the WHOLE serving path — slot surgery, chunked prefill, the fused
 decode+sample step, metrics — under an explicit ``jax.sharding.Mesh``
@@ -88,6 +107,8 @@ class MultiModelServer:
         prefill_lanes: int = 4,
         chunk_budget: int = 4,
         tail_fold: bool = True,
+        decode_steps: int = 1,
+        adaptive_horizon: bool = True,
         donate: bool | None = None,
         mesh=None,
         rules=None,
@@ -174,30 +195,96 @@ class MultiModelServer:
         if mesh is not None:
             self._key = jax.device_put(self._key, self._rep_shard)
 
-        sample = make_grid_sampler(temperature, top_k)
-        cache_ax = api.cache_axes(cfg)
+        self._sample = make_grid_sampler(temperature, top_k)
+        self._cache_ax = api.cache_axes(cfg)
+        self.decode_steps = max(1, int(decode_steps))
+        self.adaptive_horizon = adaptive_horizon
 
-        def _step_impl(params, cache, tok, pos, key):
-            logits, cache = api.decode_step(cfg, params, cache, tok[..., None], pos)
-            # pin the grid cache to the rules' layout across steps (no-op
-            # without active rules), so donation reuses the buffers and
-            # the layout never drifts from the init-time device_put
-            cache = C.constrain_tree(cache, cache_ax)
-            key, sub = jax.random.split(key)
-            return sample(logits, sub), cache, key
+        # one compiled block program per horizon k actually used (full K
+        # plus the adaptive policy's smaller powers of two: <= log2(K)+1)
+        self._block_fns: dict[int, callable] = {}
 
-        # donate the grid cache so decode/scatter update in place instead
-        # of copying the whole (M, B, max_context) grid (skipped on CPU,
-        # where XLA can't honor it and jit warns; ``donate=`` overrides —
-        # the donation-parity tests force it on to prove the donated
-        # program never reads an invalidated buffer)
+        def _dispatch(params, cache, tok, pos, key, alive, remaining, k):
+            fn = self._block_fns.get(k)
+            if fn is None:
+                fn = self._block_fns[k] = self._make_block(k)
+            return fn(params, cache, tok, pos, key, alive, remaining)
+
+        # ONE callable invoked exactly once per engine step — tests wrap
+        # it to count device dispatches; it routes to the per-k jit
+        self._step = _dispatch
         donate = self.prefill.donate
-        self._step = jax.jit(_step_impl, donate_argnums=(1,) if donate else ())
         self._scatter = jax.jit(
             lambda grid, src, i, mm, bb: api.put_state(
                 cfg, grid, api.take_state(cfg, src, i, 0), mm, bb
             ),
             donate_argnums=(0,) if donate else (),
+        )
+
+    def _make_block(self, k: int):
+        """Build the jitted K-step fused decode+sample block: a
+        ``lax.scan`` of ``k`` decode steps over the (M, B) grid inside
+        one device call, with on-device stop handling.
+
+        Carry: (tok, pos, cache, key, alive, remaining).  Each scan step
+        decodes + samples the whole grid, then masks dead lanes: their
+        token/position/budget freeze (``jnp.where``) and — for k > 1 —
+        their cache writes are reverted (``tree_select_slots``), so a
+        lane stopping mid-block leaves cache and position exactly as the
+        one-call-per-token protocol would.  Stop mirrors the host finish
+        logic bit-for-bit: budget exhausted (remaining), EOS, or
+        position reaching ``max_context - 1``.  Returns the (k, M, B)
+        token block, the (k, M, B) emitted mask (alive at entry of each
+        scan step — exactly the tokens the host unroll consumes), the
+        cache, and the advanced key (one split per scan step, so K=1
+        reproduces the historical per-call split sequence)."""
+        cfg, eos_id, max_context = self.cfg, self.eos_id, self.max_context
+        sample, cache_ax = self._sample, self._cache_ax
+
+        def _block_impl(params, cache, tok, pos, key, alive, remaining):
+            def body(carry, _):
+                tok, pos, cache, key, alive, remaining = carry
+                logits, new_cache = api.decode_step(
+                    cfg, params, cache, tok[..., None], pos
+                )
+                if k > 1:
+                    # freeze stopped lanes' state between scan steps (at
+                    # k == 1 every junk write is overwritten by scatter
+                    # before the slot decodes again — the historical
+                    # protocol — so the masking would be dead weight)
+                    new_cache = C.tree_select_slots(
+                        alive, new_cache, cache, cache_ax
+                    )
+                # pin the grid cache to the rules' layout across steps
+                # (no-op without active rules), so donation reuses the
+                # buffers and the layout never drifts from the
+                # init-time device_put
+                new_cache = C.constrain_tree(new_cache, cache_ax)
+                key, sub = jax.random.split(key)
+                nxt = jnp.where(alive, sample(logits, sub), tok)
+                new_pos = jnp.where(alive, pos + 1, pos)
+                new_rem = jnp.where(alive, remaining - 1, remaining)
+                stop = (new_rem <= 0) | (new_pos >= max_context - 1)
+                if eos_id is not None:
+                    stop = stop | (nxt == eos_id)
+                new_carry = (nxt, new_pos, new_cache, key,
+                             alive & ~stop, new_rem)
+                return new_carry, (nxt, alive)
+
+            carry = (tok, pos, cache, key, alive, remaining)
+            (_, _, cache, key, _, _), (toks, emitted) = jax.lax.scan(
+                body, carry, None, length=k
+            )
+            return toks, emitted, cache, key
+
+        # donate the grid cache so decode updates in place instead of
+        # copying the whole (M, B, max_context) grid (skipped on CPU,
+        # where XLA can't honor it and jit warns; ``donate=`` overrides —
+        # the donation-parity tests force it on to prove the donated
+        # program never reads an invalidated buffer)
+        return jax.jit(
+            _block_impl,
+            donate_argnums=(1,) if self.prefill.donate else (),
         )
 
     def _ctx(self):
@@ -386,11 +473,46 @@ class MultiModelServer:
 
     # -- engine step ----------------------------------------------------------
 
+    def _decode_horizon(self) -> int:
+        """Steps the next fused block runs (the adaptive-horizon policy,
+        DESIGN.md §6.6).  Full ``decode_steps`` when the engine is in
+        pure-decode steady state; shrunk to keep the host loop
+        responsive when there is admission work to interleave:
+
+        * lanes mid-prefill -> 1, so chunk-budgeted prefill keeps its
+          per-step interleave with decode (TTFT is not held behind a
+          K-step block),
+        * requests waiting in queue -> the largest power of two no
+          decoding slot overshoots (its remaining budget), so a slot
+          about to finish frees up and refills promptly instead of
+          riding out junk steps while the backlog waits.
+
+        Powers of two keep the compiled-shape count at log2(K)+1."""
+        K = self.decode_steps
+        if K <= 1 or not self.adaptive_horizon:
+            return K
+        if self.prefill.in_flight():
+            return 1
+        if self.scheduler.total_pending() > 0:
+            rem = [
+                self.active[m][b].max_new_tokens
+                - len(self.generated[self.active[m][b].request_id])
+                for m in range(self.m) for b in range(self.b)
+                if self.slot_busy[m, b] and not self.slot_prefilling[m, b]
+            ]
+            cap = min([K] + rem) if rem else 1
+            k = 1
+            while k * 2 <= cap:
+                k *= 2
+            return k
+        return K
+
     def step(self) -> list[Result]:
         """Admit pending requests into prefill lanes, advance prefill by
-        at most ``chunk_budget`` device calls, run ONE fused
-        decode+sample over the whole (M, B) grid, collect finished
-        slots.  Prefilling slots ride the grid as idle lanes, so long
+        at most ``chunk_budget`` device calls, run ONE fused k-step
+        decode+sample block over the whole (M, B) grid, unroll its
+        (k, M, B) tokens on the host, collect finished slots.
+        Prefilling slots ride the grid as idle (masked) lanes, so long
         prompts admit without stalling decode."""
         self._admit()
         if self.prefill.in_flight():
@@ -403,80 +525,110 @@ class MultiModelServer:
             if (self.slot_busy & ~self.slot_prefilling).any():
                 self.metrics.note_admission_stall(stall)
             self._finish_prefills(completed)
-        if not (self.slot_busy & ~self.slot_prefilling).any():
+        decoding = self.slot_busy & ~self.slot_prefilling
+        if not decoding.any():
             return []
+        k = self._decode_horizon()
+        # per-slot decode budget for the on-device stop mask: a lane
+        # whose budget (or EOS / context) hits mid-block freezes there
+        remaining = np.zeros((self.m, self.b), np.int32)
+        for m in range(self.m):
+            for b in range(self.b):
+                if decoding[m, b]:
+                    req = self.active[m][b]
+                    remaining[m, b] = (
+                        req.max_new_tokens
+                        - len(self.generated[req.request_id])
+                    )
         if self.mesh is not None:
-            # one host->device transfer straight to the grid sharding
-            tok = jax.device_put(self.cur_tok, self._grid_shard)
-            pos = jax.device_put(self.pos, self._grid_shard)
+            # one host->device transfer each, straight to the grid sharding
+            def grid_put(x):
+                return jax.device_put(x, self._grid_shard)
         else:
-            tok, pos = jnp.asarray(self.cur_tok), jnp.asarray(self.pos)
+            grid_put = jnp.asarray
+        tok_dev, pos_dev = grid_put(self.cur_tok), grid_put(self.pos)
+        alive_dev, rem_dev = grid_put(decoding), grid_put(remaining)
         tr = self.tracer
         trace_on = tr.enabled
-        if trace_on:
-            t0 = time.perf_counter()
+        t0 = time.perf_counter()
         with self._ctx():
-            nxt, self.cache, self._key = self._step(
-                self.params, self.cache, tok, pos, self._key,
+            toks, emitted, self.cache, self._key = self._step(
+                self.params, self.cache, tok_dev, pos_dev, self._key,
+                alive_dev, rem_dev, k,
             )
-        if trace_on:
-            t_dispatch = time.perf_counter()
+        # jit return = host dispatch done (device still computing): the
+        # per-call cost a K-step block amortizes K-fold
+        t_dispatch = time.perf_counter()
         self.steps += 1
-        self.metrics.note_decode_step()
-        # device_get blocks until the fused step's tokens land: the
+        # device_get blocks until the fused block's tokens land: the
         # settled timestamp is end-to-end device-call wall time
-        nxt = np.asarray(jax.device_get(nxt))
+        toks, emitted = jax.device_get((toks, emitted))
+        t_settled = time.perf_counter()
+        toks, emitted = np.asarray(toks), np.asarray(emitted)
+        block_tokens = int(emitted.sum())
+        self.metrics.note_decode_call(steps=k, tokens=block_tokens,
+                                      wall_s=t_settled - t0,
+                                      dispatch_s=t_dispatch - t0)
         if trace_on:
             tr.device_call(
-                "decode", t0, t_dispatch, time.perf_counter(),
+                "decode", t0, t_dispatch, t_settled,
                 step=self.steps,
-                active=int((self.slot_busy & ~self.slot_prefilling).sum()),
+                active=int(decoding.sum()),
                 capacity=self.m * self.b,
                 lanes_busy=self.prefill.in_flight(),
                 lanes=self.prefill.lanes,
-                tokens=int((self.slot_busy & ~self.slot_prefilling).sum()),
+                tokens=block_tokens,
                 pending=self.scheduler.total_pending(),
+                decode_steps=k,
             )
 
+        # host unroll of the (k, M, B) block: every per-token hook
+        # (metrics, scheduler accounting, on_token streaming, finish
+        # detection) fires per token, exactly as k separate one-token
+        # steps would — only the dispatch count changed
         done: list[Result] = []
-        for m in range(self.m):
-            for b in range(self.b):
-                if not self.slot_busy[m, b] or self.slot_prefilling[m, b]:
-                    continue
-                req = self.active[m][b]
-                tok = int(nxt[m, b])
-                gen = self.generated[req.request_id]
-                self.metrics.note_token(
-                    m, first=not gen, submit_time=req.submit_time,
-                    request_id=req.request_id,
-                )
-                self.scheduler.note_generated(m, 1)
-                gen.append(tok)
-                self.pos[m, b] += 1
-                self.cur_tok[m, b] = tok
-                hit_eos = self.eos_id is not None and tok == self.eos_id
-                finished = (
-                    len(gen) >= req.max_new_tokens
-                    or hit_eos
-                    or int(self.pos[m, b]) >= self.max_context - 1
-                )
-                if self.on_token is not None:
-                    self.on_token(req.request_id, tok, finished)
-                if finished:
-                    done.append(Result(
-                        req.request_id, m, gen,
-                        prompt_len=len(req.prompt),
-                        latency_s=time.perf_counter() - req.submit_time,
-                        finish_reason="stop" if hit_eos else "length",
-                    ))
-                    self.metrics.note_complete(m, req.submit_time,
-                                               request_id=req.request_id)
-                    if trace_on:
-                        tr.request_event(req.request_id, "finish",
-                                         instance=m, status="ok")
-                    self.slot_busy[m, b] = False
-                    self.active[m][b] = None
-                    del self.generated[req.request_id]
+        for j in range(k):
+            for m in range(self.m):
+                for b in range(self.b):
+                    # `decoding` is the block-entry mask; slot_busy drops
+                    # when a lane finishes mid-unroll, after which its
+                    # remaining rows are device-frozen junk — skip them
+                    if not (decoding[m, b] and self.slot_busy[m, b]):
+                        continue
+                    req = self.active[m][b]
+                    t = int(toks[j, m, b])
+                    gen = self.generated[req.request_id]
+                    self.metrics.note_token(
+                        m, first=not gen, submit_time=req.submit_time,
+                        request_id=req.request_id,
+                    )
+                    self.scheduler.note_generated(m, 1)
+                    gen.append(t)
+                    self.pos[m, b] += 1
+                    self.cur_tok[m, b] = t
+                    hit_eos = self.eos_id is not None and t == self.eos_id
+                    finished = (
+                        len(gen) >= req.max_new_tokens
+                        or hit_eos
+                        or int(self.pos[m, b]) >= self.max_context - 1
+                    )
+                    if self.on_token is not None:
+                        self.on_token(req.request_id, t, finished)
+                    if finished:
+                        done.append(Result(
+                            req.request_id, m, gen,
+                            prompt_len=len(req.prompt),
+                            latency_s=time.perf_counter() - req.submit_time,
+                            finish_reason="stop" if hit_eos else "length",
+                        ))
+                        self.metrics.note_complete(m, req.submit_time,
+                                                   request_id=req.request_id)
+                        if trace_on:
+                            tr.request_event(req.request_id, "finish",
+                                             instance=m, status="ok")
+                        self.slot_busy[m, b] = False
+                        self.active[m][b] = None
+                        del self.generated[req.request_id]
         return done
 
     def reset_metrics(self) -> ServerMetrics:

@@ -29,11 +29,20 @@ Concurrency model — single-writer, no locks:
   the driver applies strictly BETWEEN steps, in arrival order.
 * The blocking device step runs in the event loop's default executor,
   so the loop stays responsive (HTTP accepts, stream reads) while the
-  fused program runs — still exactly ONE device call per decode step.
+  fused program runs — still exactly ONE device call per engine step
+  (under multi-step decode, DESIGN.md §6.6, that one call covers up to
+  ``decode_steps`` scan steps; the engine unrolls the token block
+  host-side, so ``on_token`` still fires per token and streams flush
+  up to K tokens per step).
 * Token fan-out: the engine's ``on_token`` hook appends to a buffer
   from the executor thread (GIL-atomic list append); after the step
   future resolves, the driver — back on the loop thread — flushes the
   buffer into each stream's queue and delivers terminal Results.
+* Cancellation under multi-step decode keeps its semantics: commands
+  apply between steps, so a cancel landing while a K-step block is in
+  flight takes effect at the next step boundary — the client keeps the
+  partial tokens already unrolled, and the slot frees before the next
+  block dispatches.
 
 Determinism: with greedy sampling a stream depends only on its own
 prompt (exact chunked prefill + independent slots), so N concurrent

@@ -18,7 +18,9 @@ fused (M, B) engine to network clients:
   as a disconnect too: keep the write side open for the whole stream.)
 * ``GET /v1/models`` — the instance-row routing table.
 * ``GET /metrics`` — the full ``ServerMetrics.snapshot()`` JSON,
-  including per-instance TTFT/ITL p50/p95/p99.  ``Accept: text/plain``
+  including per-instance TTFT/ITL p50/p95/p99 and the multi-step
+  decode amortization figures (``decode_device_calls``,
+  ``tokens_per_device_call`` — DESIGN.md §6.6).  ``Accept: text/plain``
   (or any ``openmetrics`` media type) negotiates Prometheus text
   exposition instead — same counters, scrapable.
 * ``POST /metrics/reset`` — zero the metrics window (applied between
@@ -343,6 +345,9 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
                     "in_flight": engine.in_flight(),
                     "queue_depths": engine.server.scheduler.depths(),
                     "tracing": engine.server.tracer.enabled,
+                    # multi-step decode horizon (DESIGN.md §6.6): scan
+                    # steps fused per decode device call
+                    "decode_steps": engine.server.decode_steps,
                 })
             elif path == "/debug/trace" and method == "GET":
                 _write_response(writer, 200,

@@ -65,7 +65,16 @@ class ServerMetrics:
         self.m = num_instances
         self.clock = clock
         self.per_instance = [InstanceStats() for _ in range(num_instances)]
-        self.decode_steps = 0        # fused (M, B)-grid decode+sample calls
+        self.decode_steps = 0        # fused (M, B)-grid decode+sample steps
+        self.decode_calls = 0        # fused decode device calls (blocks of
+                                     # up to K scan steps — DESIGN.md §6.6;
+                                     # == decode_steps when K == 1)
+        self.decode_tokens = 0       # real tokens emitted by those calls
+        self.decode_wall_s = 0.0     # settled wall inside those calls
+                                     # (dispatch -> tokens on host)
+        self.decode_dispatch_s = 0.0  # host dispatch slice of that wall
+                                      # (call -> jit return) — the cost
+                                      # K-step blocks amortize K-fold
         self.prefill_batches = 0     # chunk/tail prefill device calls
         self.prefill_requests = 0    # lane-steps served by them
         self.prefill_tokens = 0      # real (non-padded) positions prefilled
@@ -122,8 +131,18 @@ class ServerMetrics:
     def note_prefill_wall(self, seconds: float) -> None:
         self.prefill_wall_s += seconds
 
-    def note_decode_step(self) -> None:
-        self.decode_steps += 1
+    def note_decode_call(self, steps: int = 1, tokens: int = 0,
+                         wall_s: float = 0.0,
+                         dispatch_s: float = 0.0) -> None:
+        """One fused decode device call covering ``steps`` scan steps
+        and emitting ``tokens`` real (non-frozen-lane) tokens over
+        ``wall_s`` seconds of settled dispatch-to-host wall time, of
+        which ``dispatch_s`` was spent on host-side dispatch."""
+        self.decode_calls += 1
+        self.decode_steps += steps
+        self.decode_tokens += tokens
+        self.decode_wall_s += wall_s
+        self.decode_dispatch_s += dispatch_s
 
     def note_scatter(self) -> None:
         self.scatter_calls += 1
@@ -199,13 +218,25 @@ class ServerMetrics:
                 "itl_ms": percentiles(itl_samples),
             })
         gen = sum(s.generated_tokens for s in self.per_instance)
-        # split throughput: prefill rate over the settled admission wall
-        # time, decode rate over the remainder — the two phases interleave
-        # inside one step loop, so the denominators partition wall_s
-        decode_wall = max(dt - self.prefill_wall_s, 1e-9)
+        # split throughput over each phase's own settled device wall:
+        # prefill rate over advance()'s wall, decode rate over the decode
+        # blocks' dispatch->host wall (engine times every fused call) —
+        # scheduler/scatter/host-unroll time belongs to neither phase.
+        # Fallback for synthetic windows with no timed calls: the
+        # pre-§6.6 wall split (everything-but-prefill)
+        decode_wall = (self.decode_wall_s if self.decode_wall_s > 0
+                       else max(dt - self.prefill_wall_s, 1e-9))
         out = {
             "wall_s": dt,
             "decode_steps": self.decode_steps,
+            # multi-step decode (DESIGN.md §6.6): device calls vs scan
+            # steps vs tokens — tokens_per_device_call is the K*occupancy
+            # dispatch-amortization figure /metrics exposes
+            "decode_device_calls": self.decode_calls,
+            "tokens_per_device_call": (
+                self.decode_tokens / self.decode_calls
+                if self.decode_calls else 0.0
+            ),
             "prefill_batches": self.prefill_batches,
             "prefill_requests": self.prefill_requests,
             "prefill_tokens": self.prefill_tokens,
@@ -214,14 +245,22 @@ class ServerMetrics:
                 self.prefill_tokens / self.prefill_wall_s
                 if self.prefill_wall_s > 0 else 0.0
             ),
-            "decode_tok_per_s": gen / decode_wall,
+            "decode_wall_s": self.decode_wall_s,
+            "decode_tok_per_s": (self.decode_tokens if self.decode_wall_s > 0
+                                 else gen) / decode_wall,
+            # host-dispatch cost per emitted token — the figure multi-step
+            # blocks shrink ~K-fold (DESIGN.md §6.6)
+            "decode_dispatch_ms_per_token": (
+                1e3 * self.decode_dispatch_s / self.decode_tokens
+                if self.decode_tokens else 0.0
+            ),
             "device_calls_per_admission": (
                 self.prefill_batches / self.admitted if self.admitted else 0.0
             ),
             # cumulative device-call + compiled-shape counters: /metrics
             # alone is enough to spot a recompile or dispatch regression
             "scatter_calls": self.scatter_calls,
-            "device_calls": (self.decode_steps + self.prefill_batches
+            "device_calls": (self.decode_calls + self.prefill_batches
                              + self.scatter_calls),
             "prefill_compiled_shapes": (
                 self.compiled_shapes_fn() if self.compiled_shapes_fn
@@ -269,7 +308,9 @@ class ServerMetrics:
         rows.append(
             f"total: {snap['generated_tokens']} tokens in {snap['wall_s']:.2f}s "
             f"({snap['tok_per_s']:.1f} tok/s) — {snap['decode_steps']} fused decode "
-            f"steps, {snap['prefill_batches']} prefill chunk calls "
+            f"steps in {snap['decode_device_calls']} device calls "
+            f"({snap['tokens_per_device_call']:.1f} tok/call), "
+            f"{snap['prefill_batches']} prefill chunk calls "
             f"({snap['prefill_requests']} lane-steps, "
             f"{snap['device_calls_per_admission']:.2f} calls/admission), "
             f"prefill {snap['prefill_tok_per_s']:.1f} tok/s / "

@@ -23,7 +23,13 @@ _ENGINE_FIELDS = (
     ("generated_tokens", "generated_tokens_total", "counter",
      "Tokens generated across all instances"),
     ("decode_steps", "decode_steps_total", "counter",
-     "Fused (M,B)-grid decode+sample device calls"),
+     "Fused (M,B)-grid decode+sample scan steps"),
+    ("decode_device_calls", "decode_device_calls_total", "counter",
+     "Fused decode device calls (K-step blocks; == steps at K=1)"),
+    ("tokens_per_device_call", "tokens_per_device_call", "gauge",
+     "Real tokens emitted per fused decode device call (K*occupancy)"),
+    ("decode_dispatch_ms_per_token", "decode_dispatch_ms_per_token", "gauge",
+     "Host dispatch ms per decoded token (amortized ~K-fold by blocks)"),
     ("prefill_batches", "prefill_chunk_calls_total", "counter",
      "Prefill chunk/tail device calls"),
     ("prefill_tokens", "prefill_tokens_total", "counter",

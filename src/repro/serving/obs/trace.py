@@ -74,6 +74,8 @@ class DeviceCallEvent:
     valid_frac: float = 1.0    # real positions / padded positions (chunks)
     tokens: int = 0            # real tokens this call advanced
     pending: int = 0           # queued requests at the call
+    decode_steps: int = 1      # scan steps fused into this call (decode
+                               # blocks, DESIGN.md §6.6; 1 otherwise)
 
 
 @dataclasses.dataclass
@@ -134,7 +136,7 @@ class Tracer:
                     t_settled: float, *, step: int = 0, active: int = 0,
                     capacity: int = 0, lanes_busy: int = 0, lanes: int = 0,
                     valid_frac: float = 1.0, tokens: int = 0,
-                    pending: int = 0) -> None:
+                    pending: int = 0, decode_steps: int = 1) -> None:
         """Record one device call; timestamps are raw ``clock()`` reads
         (the tracer rebases them onto its epoch)."""
         last = self._last_settled
@@ -145,7 +147,7 @@ class Tracer:
             gap_s=(t0 - last) if last is not None else 0.0,
             step=step, active=active, capacity=capacity,
             lanes_busy=lanes_busy, lanes=lanes, valid_frac=valid_frac,
-            tokens=tokens, pending=pending,
+            tokens=tokens, pending=pending, decode_steps=decode_steps,
         ))
 
     def request_event(self, rid: int, stage: str, *, instance: int = -1,
@@ -198,6 +200,7 @@ class Tracer:
                         "valid_frac": ev.valid_frac,
                         "tokens": ev.tokens,
                         "pending": ev.pending,
+                        "decode_steps": ev.decode_steps,
                     },
                 })
             else:
@@ -251,9 +254,22 @@ class Tracer:
         # construction, harmless in the percentiles
         gaps = [e.gap_s for e in calls]
         occ = [e.active / e.capacity for e in decodes if e.capacity]
+        decode_tokens = sum(e.tokens for e in decodes)
+        decode_gap_s = sum(e.gap_s for e in decodes)
         out = {
             "device_calls": len(calls),
-            "decode_steps": len(decodes),
+            "decode_steps": len(decodes),   # decode device calls (blocks)
+            # multi-step decode (DESIGN.md §6.6): scan steps fused into
+            # those calls, and the per-TOKEN dispatch cost — the figure
+            # K-fold amortization actually improves (per-CALL overhead
+            # stays flat while each call yields up to K*occupancy tokens)
+            "decode_scan_steps": sum(e.decode_steps for e in decodes),
+            "mean_decode_steps_per_call": (
+                sum(e.decode_steps for e in decodes) / len(decodes)
+                if decodes else 0.0),
+            "dispatch_overhead_per_token_ms": (
+                1e3 * decode_gap_s / decode_tokens
+                if decode_tokens else None),
             "prefill_chunks": len(chunks),
             "scatters": sum(1 for e in calls if e.kind == "scatter"),
             # host time between device calls — the per-step dispatch

@@ -4,8 +4,14 @@ The old engine fetched the (M, B, V) logits to the host every decode
 step and ran per-slot ``np.argmax`` / ``jax.random.categorical`` — one
 host round-trip plus M*B tiny device calls per generated token.  Here
 the whole grid is sampled in ONE fused op that lives inside the same
-jitted program as the decode step (engine._step), so a serving step is
-exactly one device call regardless of M and B.
+jitted program as the decode step (the engine's multi-step block,
+DESIGN.md §6.6), so a serving step is exactly one device call
+regardless of M and B.  Inside the block's ``lax.scan`` the sampler
+runs once per scan step with a fresh ``jax.random.split`` of the
+carried key — one split per decoded step, exactly the split sequence
+the historical one-call-per-token protocol produced, so K=1 streams
+are bit-identical to it (greedy streams are key-independent and
+bit-identical across ALL K).
 
 Greedy (temperature <= 0), temperature and top-k sampling; every slot
 draws from an independent stream derived from one key (fold over the

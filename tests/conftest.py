@@ -7,6 +7,22 @@ stand-ins for ``given``/``settings``/``st`` from here (module-level
 too).  ``given`` marks the test as skipped; ``st`` strategies evaluate
 to inert placeholders so decorator arguments still build.
 """
+import os
+
+# jax 0.4.3x's CPU thunk runtime segfaults inside backend_compile once a
+# single process has accumulated enough compiled executables (reproducible
+# at test_serving_chunked.py scale, same crash with the repo diff stashed
+# — not our code).  The legacy runtime compiles everything cleanly, so
+# pin it for the whole suite.  Appended (not assigned) so CI's
+# --xla_force_host_platform_device_count survives; must run before the
+# first jax import in the test process, which conftest import order
+# guarantees.
+_xla_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_cpu_use_thunk_runtime" not in _xla_flags:
+    os.environ["XLA_FLAGS"] = (
+        _xla_flags + " --xla_cpu_use_thunk_runtime=false"
+    ).strip()
+
 import pytest
 
 
