@@ -58,6 +58,13 @@ _SERVE_METRICS = (
     ("K8 vs K1 call reduction", ("k8_vs_k1_call_reduction",), True),
     ("K8 vs K1 dispatch/token reduction",
      ("k8_vs_k1_dispatch_per_token_reduction",), True),
+    # decode-layer megakernel (ISSUE 8) — absent in pre-PR-8 records
+    ("launches/decode-step megakernel (no mesh)",
+     ("kernel_launches_per_decode_step", "no_mesh", "megakernel"), False),
+    ("launches/decode-step unfused (no mesh)",
+     ("kernel_launches_per_decode_step", "no_mesh", "unfused"), False),
+    ("megakernel launch reduction (no mesh)",
+     ("kernel_launches_per_decode_step", "no_mesh", "reduction"), True),
     ("dispatch overhead/token (ms)",
      ("obs", "dispatch_overhead_per_token_ms"), False),
     ("dispatch overhead p50 (ms)", ("dispatch_overhead_ms", "p50"), False),

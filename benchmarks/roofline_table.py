@@ -5,7 +5,9 @@ results/dryrun/*.json.
 
 ``--achieved`` switches to MEASURED mode: instead of rendering saved
 dry-run (predicted) rooflines, it times each serving Pallas kernel —
-fused_matmul, decode_attn, chunk_prefill_attn, mlstm_chunk, slstm_cell —
+fused_matmul, decode_attn, chunk_prefill_attn, mlstm_chunk, slstm_cell,
+plus the fused decode_layer megakernel and the logits_sample
+(final-norm + unembed + greedy argmax) kernel —
 at ``--arch``'s serving shapes and prints achieved FLOP/s / bytes/s
 against the same roofline envelope (repro.serving.obs.kernel_profile).
 On non-TPU backends the kernels run in the Pallas interpreter and every

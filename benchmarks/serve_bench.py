@@ -239,6 +239,77 @@ def _decode_sweep(cfg, merged, mesh, args, reqs, seq_wall) -> dict:
     return out
 
 
+_LAUNCH_SKIP = {
+    # layout/metadata-only primitives XLA never dispatches a kernel for
+    "broadcast_in_dim", "reshape", "squeeze", "expand_dims", "transpose",
+    "convert_element_type", "copy", "stop_gradient", "slice", "split",
+}
+
+
+def _sub_jaxprs(params: dict):
+    """Yield every (closed) sub-jaxpr hiding in an eqn's params."""
+    for val in params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if hasattr(v, "eqns"):
+                yield v
+            elif hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                yield v.jaxpr
+
+
+def _count_launches(jaxpr) -> int:
+    """Kernel-launch proxy for one traced decode block: count compute
+    primitives, recursing through pjit/shard_map/while/cond and
+    multiplying a scan body by its trip count.  A ``pallas_call`` counts
+    as ONE launch no matter how much runs inside it — which is exactly
+    the megakernel's claim.  (XLA fusion means the absolute numbers
+    overstate real launches on both sides; the unfused/megakernel RATIO
+    is the figure of merit.)"""
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            total += 1
+            continue
+        subs = list(_sub_jaxprs(eqn.params))
+        if subs:
+            inner = sum(_count_launches(s) for s in subs)
+            if name == "scan":
+                inner *= int(eqn.params.get("length", 1))
+            total += inner
+            continue
+        if name not in _LAUNCH_SKIP:
+            total += 1
+    return total
+
+
+def _kernel_launch_ab(cfg, merged, mesh, args) -> dict | None:
+    """Megakernel A/B (ISSUE 8): trace ONE greedy decode step unfused vs
+    fused-layer megakernel and compare the launch proxy, on the no-mesh
+    and (when serving sharded) mesh paths.  Dense/vlm only — the other
+    families keep their per-op decode graphs."""
+    if cfg.family not in ("dense", "vlm"):
+        return None
+    out = {}
+    for mesh_key, msh in (("no_mesh", None), ("mesh", mesh)):
+        if mesh_key == "mesh" and msh is None:
+            out[mesh_key] = None
+            continue
+        sides = {}
+        for side, flag in (("unfused", False), ("megakernel", True)):
+            srv = _mk_server(cfg.with_(use_pallas_kernels=flag), merged, msh,
+                             args, decode_steps=1)
+            z = np.zeros((srv.m, srv.b), np.int32)
+            alive = np.zeros((srv.m, srv.b), bool)
+            with srv._ctx():
+                closed = jax.make_jaxpr(srv._make_block(1))(
+                    srv.params, srv.cache, z, z, srv._key, alive, z)
+            sides[side] = _count_launches(closed.jaxpr)
+        sides["reduction"] = sides["unfused"] / max(sides["megakernel"], 1)
+        out[mesh_key] = sides
+    return out
+
+
 def _run_load_gen(cfg, merged, mesh, args, reqs) -> dict:
     """Open-loop load generation through the AsyncEngine: pre-drawn
     exponential arrivals at ``--arrival-rate`` req/s, round-robin over
@@ -432,6 +503,20 @@ def validate_record(record: dict) -> None:
     v = record["mean_grid_occupancy"]
     assert isinstance(v, (int, float)) and _math.isfinite(v), v
     assert obs["trace_events"] > 0 and obs["device_calls"] > 0
+    # megakernel launch-count A/B: when present (dense/vlm records) the
+    # fused-layer path must actually collapse the traced decode graph —
+    # a megakernel routing regression fails the bench, not just a test
+    kl = record.get("kernel_launches_per_decode_step")
+    if kl is not None:
+        for mesh_key, sides in kl.items():
+            if sides is None:
+                continue
+            where = f"kernel_launches_per_decode_step.{mesh_key}"
+            assert sides["unfused"] > 0 and sides["megakernel"] > 0, where
+            assert sides["megakernel"] < sides["unfused"], (
+                f"{where}: megakernel path did not reduce launches "
+                f"({sides['megakernel']} vs {sides['unfused']})")
+            assert sides["reduction"] > 1.0, where
     if record.get("kernel_roofline") is not None:
         from repro.serving.obs import validate_profile
         validate_profile(record["kernel_roofline"])
@@ -580,6 +665,10 @@ def main():
                  if mesh is not None else None),
     }
 
+    # megakernel launch-count A/B (ISSUE 8): the fused decode-layer
+    # path's measurable win on this host is the traced-graph collapse
+    kernel_launches = _kernel_launch_ab(cfg, merged, mesh, args)
+
     # open-loop async load generation through the streaming frontend:
     # the section the TTFT/ITL tail-latency trajectory is tracked on
     load_gen = (
@@ -628,6 +717,7 @@ def main():
         "sequential": seq,
         "tail_folding": tail_folding,
         "decode_horizon": decode_horizon,
+        "kernel_launches_per_decode_step": kernel_launches,
         "load_gen": load_gen,
         "obs": obs,
         # promoted to top level so perf_delta can diff the dispatch

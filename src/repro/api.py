@@ -92,6 +92,20 @@ def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
     return family_module(cfg).decode_step(cfg, params, cache, tokens, pos)
 
 
+def decode_step_sample(cfg: ModelConfig, params, cache, tokens, pos):
+    """Greedy decode step: (next_token (M,B) int32, new cache).
+
+    Families with a fused decode+sample path (dense/vlm megakernel:
+    final-norm + logits + argmax in one Pallas call) provide their own;
+    everything else is argmax over decode_step logits — token-identical
+    to the engine's temperature<=0 sampler either way."""
+    mod = family_module(cfg)
+    if hasattr(mod, "decode_step_sample"):
+        return mod.decode_step_sample(cfg, params, cache, tokens, pos)
+    logits, new_cache = mod.decode_step(cfg, params, cache, tokens, pos)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+
 # ---------------------------------------------------------------------------
 # chunked prefill (chainable cache-carry protocol — DESIGN.md §6.2)
 # ---------------------------------------------------------------------------

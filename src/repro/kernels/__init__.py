@@ -5,3 +5,10 @@ from repro.kernels.chunk_prefill_attn import (
     chunk_prefill_attention,
     chunk_prefill_attention_sharded,
 )
+from repro.kernels.decode_layer import (
+    decode_layer,
+    decode_layer_sharded,
+    logits_sample,
+    logits_sample_sharded,
+    tp_head_plan,
+)

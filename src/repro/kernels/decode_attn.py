@@ -123,25 +123,47 @@ def decode_attention_sharded(
     """``decode_attention`` under ``shard_map`` on the rules' mesh.
 
     Serving layout: (M, B) rides the data axes and KV-head groups ride
-    "model" — each rank owns a slice of kv heads plus their grouped q
-    heads end-to-end (q heads are laid out kvh-major, so a contiguous
-    H-split of KVH/n groups matches a contiguous KVH-split), runs the
-    Pallas flash-decode kernel on its local block and writes its output
-    shard.  Exact with no collectives; interpret-mode fallback intact.
-    Falls back to the plain (GSPMD-partitioned) call when KVH doesn't
-    divide the model axis.
+    "model" — the head-grouping recipe is ``tp_head_plan`` (shared with
+    the decode-layer megakernel's shard_map variant).  "kv": each rank
+    owns KVH/n kv heads plus their grouped q heads end-to-end (q heads
+    are laid out kvh-major, so a contiguous H-split of KVH/n groups
+    matches a contiguous KVH-split).  "expand" (GQA/MQA where the kv
+    heads don't split): KV is expanded to one head per q head, so any
+    H-split works — per-rank KV bytes go kvh*hd -> (h/n)*hd, still a
+    strict reduction whenever n > g.  Exact with no collectives; falls
+    back to the plain (GSPMD-partitioned) call only when the q heads
+    themselves can't split.
     """
+    from repro.kernels.decode_layer import tp_head_plan
     from repro.launch.compat import shard_map
 
     m, b, h, hd = q.shape
     s, kvh = k.shape[2], k.shape[3]
     n_model = rules._axis_size(rules.mapping.get("kv_heads"))
-    if n_model <= 1 or kvh % n_model or h % n_model:
-        return decode_attention(q, k, v, kv_len, **kw)
+    plan = tp_head_plan(h, kvh, n_model)
+    if plan is None:
+        # q heads can't split — run data-local (heads replicated over
+        # "model").  A bare pallas_call under GSPMD is not safe here:
+        # the partitioner splits the (M, B) grid while the kernel
+        # indexes the scalar-prefetched kv_len with global program ids
+        q_rep = rules.spec(("instances", "batch", None, None), q.shape)
+        kv_rep = rules.spec(("instances", "batch", None, None, None), k.shape)
+        len_spec = rules.spec(("instances", "batch"), (m, b))
+        return shard_map(
+            lambda ql, kl, vl, ll: decode_attention(ql, kl, vl, ll, **kw),
+            mesh=rules.mesh,
+            in_specs=(q_rep, kv_rep, kv_rep, len_spec),
+            out_specs=q_rep,
+            check_vma=False,
+        )(q, k, v, kv_len)
+    if plan == "expand":
+        g = h // kvh
+        k = jnp.repeat(k, g, axis=3)
+        v = jnp.repeat(v, g, axis=3)
 
     q_spec = rules.spec(("instances", "batch", "kv_heads", None), (m, b, h, hd))
     kv_spec = rules.spec(
-        ("instances", "batch", None, "kv_heads", None), (m, b, s, kvh, hd)
+        ("instances", "batch", None, "kv_heads", None), k.shape
     )
     len_spec = rules.spec(("instances", "batch"), (m, b))
     return shard_map(

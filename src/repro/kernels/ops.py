@@ -22,6 +22,10 @@ from repro.kernels.chunk_prefill_attn import (
 )
 from repro.kernels.decode_attn import decode_attention as _decode_attention_pl
 from repro.kernels.decode_attn import decode_attention_sharded as _decode_attention_sh
+from repro.kernels.decode_layer import decode_layer as _decode_layer_pl
+from repro.kernels.decode_layer import decode_layer_sharded as _decode_layer_sh
+from repro.kernels.decode_layer import logits_sample as _logits_sample_pl
+from repro.kernels.decode_layer import logits_sample_sharded as _logits_sample_sh
 from repro.kernels.fused_matmul import fused_matmul as _fused_matmul_pl
 from repro.kernels.fused_matmul import fused_matmul_sharded as _fused_matmul_sh
 from repro.kernels.group_norm import group_rms_norm as _group_rms_norm_pl
@@ -61,6 +65,42 @@ def decode_attention(q, k, v, kv_len, *, use_pallas: bool = True, rules=None, **
         return _decode_attention_sh(q, k, v, kv_len, rules=rules,
                                     interpret=_interpret(), **kw)
     return _decode_attention_pl(q, k, v, kv_len, interpret=_interpret(), **kw)
+
+
+def decode_layer(lp, x, ck, cv, pos, *, num_heads, head_dim, rope_theta,
+                 window: int = 0, eps: float = 1e-5, use_pallas: bool = True,
+                 rules=None, **kw):
+    """Fused dense decode layer — ONE pallas_call per layer over the
+    (M, B) grid, KV append in-kernel (kernels/decode_layer.py).
+    ``rules=`` runs the attention/FFN phase pair under shard_map —
+    (M, B) data-parallel, head/ffn slices tensor-parallel."""
+    if not use_pallas:
+        return ref.decode_layer(
+            lp, x, ck, cv, pos, num_heads=num_heads, head_dim=head_dim,
+            rope_theta=rope_theta, window=window, eps=eps)
+    if rules is not None:
+        return _decode_layer_sh(
+            lp, x, ck, cv, pos, rules=rules, num_heads=num_heads,
+            head_dim=head_dim, rope_theta=rope_theta, window=window, eps=eps,
+            interpret=_interpret(), **kw)
+    return _decode_layer_pl(
+        lp, x, ck, cv, pos, num_heads=num_heads, head_dim=head_dim,
+        rope_theta=rope_theta, window=window, eps=eps,
+        interpret=_interpret(), **kw)
+
+
+def logits_sample(x, scale, head, *, eps: float = 1e-5,
+                  use_pallas: bool = True, rules=None, **kw):
+    """Fused final-norm + logits projection + greedy argmax
+    (kernels/decode_layer.py).  ``rules=`` shards the vocab over "model"
+    with a cross-rank argmax combine."""
+    if not use_pallas:
+        return ref.logits_sample(x, scale, head, eps=eps)
+    if rules is not None:
+        return _logits_sample_sh(x, scale, head, rules=rules, eps=eps,
+                                 interpret=_interpret(), **kw)
+    return _logits_sample_pl(x, scale, head, eps=eps,
+                             interpret=_interpret(), **kw)
 
 
 def chunk_prefill_attention(q, k, v, offset, *, s_cache: int, pin: int = 0,

@@ -130,3 +130,37 @@ def mlstm_chunkwise(q, k, v, lf, li, *, chunk: int = 64):
     from repro.models import ssm
     h, (c, n, m) = ssm.mlstm_sequence(q, k, v, lf, li, chunk=chunk)
     return h.astype(q.dtype), (c, n, m)
+
+
+def decode_layer(lp, x, ck, cv, pos, *, num_heads, head_dim, rope_theta,
+                 window: int = 0, eps: float = 1e-5):
+    """Unfused dense decode layer — exactly the models/dense.py
+    ``_attn_mlp`` decode semantics (rms -> QKV+rope -> ring append ->
+    flash attention -> out-proj -> residual -> rms -> SwiGLU -> residual).
+
+    x: (M,B,D) residual for the decode position; ck/cv: (M,B,S,KVH,hd)
+    ring cache before the token; pos: (M,B) int32.  Returns
+    (x_out (M,B,D), k_out, v_out)."""
+    from repro.models import layers as L
+
+    xs = x[:, :, None]                                       # (M,B,1,D)
+    n = L.rms_norm(xs, lp["attn_norm"], eps)
+    a, new_cache = L.gqa_attention(
+        n, lp, num_heads=num_heads, num_kv_heads=ck.shape[3],
+        head_dim=head_dim, rope_theta=rope_theta, positions=pos[..., None],
+        window=window, cache=(ck, cv), decode_pos=pos,
+    )
+    xs = xs + a
+    n = L.rms_norm(xs, lp["mlp_norm"], eps)
+    xs = xs + L.swiglu_mlp(n, lp["w_gate"], lp["w_up"], lp["w_down"])
+    return xs[:, :, 0], new_cache[0], new_cache[1]
+
+
+def logits_sample(x, scale, head, *, eps: float = 1e-5):
+    """Final-norm + f32 logits + greedy argmax: x (M,B,D), scale (M,D),
+    head (M,D,V) -> (M,B) int32."""
+    from repro.models import layers as L
+
+    n = L.rms_norm(x[:, :, None], scale, eps)
+    logits = L.unembed(n, head)[:, :, 0]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

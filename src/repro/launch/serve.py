@@ -117,6 +117,12 @@ def main():
                          "(multi-step decode, DESIGN.md §6.6; stop "
                          "handling is on-device, streams are bit-identical "
                          "to K=1 under greedy sampling)")
+    ap.add_argument("--pallas-kernels", action="store_true",
+                    help="route decode through the fused Pallas path "
+                         "(decode-layer megakernel + fused greedy "
+                         "sampling, DESIGN.md §6.7; interpret mode off "
+                         "TPU, so expect launch-count wins, not "
+                         "wall-clock, on CPU)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
@@ -152,6 +158,8 @@ def main():
             print(f"raising --max-context {max_context} -> {need} "
                   f"(hybrid meta tokens + SWA ring)")
             max_context = need
+    if args.pallas_kernels:
+        base = base.with_(use_pallas_kernels=True)
     m = args.num_instances
     cfg1 = base.with_(num_instances=1)
     cfg = base.with_(num_instances=m)

@@ -264,10 +264,37 @@ def _prefill_chunk_embeds(cfg: ModelConfig, params, x, carry, offset, valid=None
     return {"cache": KVCache(k=nk, v=nv)}
 
 
+def _decode_layers_fused(cfg: ModelConfig, params, cache: KVCache, x, pos):
+    """Megakernel decode body: one Pallas launch per layer
+    (kernels/decode_layer.py) — norms, QKV+RoPE, in-kernel ring append,
+    flash decode attention, out-proj, SwiGLU all fused over the (M, B)
+    grid.  x: (M,B,D) residual; returns (x_out, updated cache)."""
+    from repro.kernels import ops as K
+    from repro.models.common import active_rules
+
+    rules = active_rules()
+
+    def body(xc, xs):
+        lp, ck, cv = xs
+        out, nk, nv = K.decode_layer(
+            lp, xc, ck, cv, pos, num_heads=cfg.num_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=cfg.sliding_window, eps=cfg.norm_eps, rules=rules,
+        )
+        return out, (nk, nv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    return x, KVCache(k=nk, v=nv)
+
+
 def decode_step(cfg: ModelConfig, params, cache: KVCache, tokens, pos):
     """One decode step. tokens (M,B,1); pos (M,B) = index of this token.
     Returns (logits (M,B,V), updated cache)."""
     x = _embed_in(cfg, params, tokens)
+    if cfg.use_pallas_kernels:
+        x, new_cache = _decode_layers_fused(cfg, params, cache, x[:, :, 0], pos)
+        logits = _logits(cfg, params, x[:, :, None])[:, :, 0]
+        return logits, new_cache
     positions = pos[..., None]
     window = cfg.sliding_window
 
@@ -281,6 +308,31 @@ def decode_step(cfg: ModelConfig, params, cache: KVCache, tokens, pos):
     x, (nk, nv) = lax.scan(body, x, (params["layers"], cache.k, cache.v))
     logits = _logits(cfg, params, x)[:, :, 0]
     return logits, KVCache(k=nk, v=nv)
+
+
+def decode_step_sample(cfg: ModelConfig, params, cache: KVCache, tokens, pos):
+    """Greedy decode step: returns (next_token (M,B) int32, new cache).
+
+    With ``cfg.use_pallas_kernels`` the final-norm + logits projection +
+    argmax collapse into one fused kernel
+    (kernels/decode_layer.py::logits_sample), so a steady-state decode
+    scan step is ~num_layers + 1 launches; otherwise this is argmax over
+    the plain decode_step logits (the two are token-identical)."""
+    if cfg.use_pallas_kernels:
+        from repro.kernels import ops as K
+        from repro.models.common import active_rules
+
+        x = _embed_in(cfg, params, tokens)[:, :, 0]
+        x, new_cache = _decode_layers_fused(cfg, params, cache, x, pos)
+        head = (
+            jnp.swapaxes(params["embed"], -1, -2) if cfg.tie_embeddings
+            else params["lm_head"]
+        )
+        tok = K.logits_sample(x, params["final_norm"], head,
+                              eps=cfg.norm_eps, rules=active_rules())
+        return tok, new_cache
+    logits, new_cache = decode_step(cfg, params, cache, tokens, pos)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
 
 
 def make_cache(cfg: ModelConfig, m: int, b: int, context_len: int) -> KVCache:

@@ -310,9 +310,12 @@ def _norm_branch(y, scale, eps):
 def hymba_block(
     cfg, lp, x, positions, window, *,
     kv_cache=None, decode_pos=None, cache_slot=None, cache_kv_pos=None,
-    ssm_state=None,
+    ssm_state=None, kernel_attn: bool = False,
 ):
-    """One hybrid block. window: static int or traced scalar."""
+    """One hybrid block. window: static int or traced scalar.
+    ``kernel_attn`` routes decode attention through the Pallas
+    flash-decode kernel (valid only for the plain-ring global-group
+    layout — see gqa_attention's use_kernel contract)."""
     xn = L.rms_norm(x, lp["norm"], cfg.norm_eps)
     attn_out, new_kv = L.gqa_attention(
         xn, lp,
@@ -321,6 +324,7 @@ def hymba_block(
         positions=positions, window=window, sink=NUM_META_TOKENS,
         cache=kv_cache, decode_pos=decode_pos,
         cache_slot=cache_slot, cache_kv_pos=cache_kv_pos,
+        use_kernel=kernel_attn,
     )
     ssm_out, new_ssm = mamba_branch(cfg, lp, xn, state=ssm_state)
     fused = 0.5 * (
@@ -426,13 +430,18 @@ def decode_step(cfg, params, cache, tokens, pos):
             kv_pos = _swa_slot_positions(pos, s_cache)
             win = w
 
-        def body(xc, xs, win=win, slot=slot, kv_pos=kv_pos):
+        # global groups are a plain ring with no effective window, which
+        # is exactly the flash-decode kernel's contract; SWA groups keep
+        # the meta-pinned XLA path
+        kattn = bool(cfg.use_pallas_kernels) and is_global
+
+        def body(xc, xs, win=win, slot=slot, kv_pos=kv_pos, kattn=kattn):
             lp, ck, cv, sh, sconv = xs
             out, nkv, nssm = hymba_block(
                 cfg, lp, xc, positions, win,
                 kv_cache=(ck, cv), decode_pos=pos,
                 cache_slot=slot, cache_kv_pos=kv_pos,
-                ssm_state={"h": sh, "conv": sconv},
+                ssm_state={"h": sh, "conv": sconv}, kernel_attn=kattn,
             )
             return out, (nkv[0], nkv[1], nssm["h"], nssm["conv"])
 

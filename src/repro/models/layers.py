@@ -495,6 +495,7 @@ def gqa_attention(
     cache_slot: jax.Array | None = None,
     cache_kv_pos: jax.Array | None = None,
     kv_override: tuple[jax.Array, jax.Array] | None = None,
+    use_kernel: bool = False,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
     """Merged multi-instance GQA attention.
 
@@ -546,9 +547,29 @@ def gqa_attention(
             else cache_slot_positions(decode_pos, s_cache)
         )                                                      # (M,B,S_cache)
         q_pos = decode_pos[..., None]                          # (M,B,1)
-        o = flash_attention(
-            q, ck, cv, q_pos, kv_pos, window=window, sink=sink, causal=True
-        )
+        if (
+            use_kernel
+            and not isinstance(window, jax.Array)
+            and (window <= 0 or window >= s_cache)
+        ):
+            # plain-ring no-window decode (window >= S includes hybrid's
+            # GLOBAL_WINDOW sentinel — the mask never bites once the
+            # ring itself caps history at S): slots [0, min(pos+1, S))
+            # are exactly the valid set, which is the flash-decode
+            # kernel's kv_len prefix contract (kernels/decode_attn.py).
+            # use_kernel=True is the caller asserting the plain-ring
+            # layout (slot = pos % S, kv positions = slot positions)
+            from repro.kernels import ops as _K
+            from repro.models.common import active_rules
+
+            kv_len = jnp.minimum(decode_pos + 1, s_cache).astype(jnp.int32)
+            o = _K.decode_attention(
+                q[:, :, 0], ck, cv, kv_len, rules=active_rules()
+            )[:, :, None]
+        else:
+            o = flash_attention(
+                q, ck, cv, q_pos, kv_pos, window=window, sink=sink, causal=True
+            )
     else:
         q_pos = positions
         if kv_override is not None:

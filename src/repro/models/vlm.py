@@ -135,6 +135,7 @@ def prefill_chunk(cfg, params, batch, carry, offset):
 
 
 decode_step = dense.decode_step
+decode_step_sample = dense.decode_step_sample
 make_cache = dense.make_cache
 cache_axes = dense.cache_axes
 init_chunk_carry = dense.init_chunk_carry

@@ -196,6 +196,11 @@ class MultiModelServer:
             self._key = jax.device_put(self._key, self._rep_shard)
 
         self._sample = make_grid_sampler(temperature, top_k)
+        # temperature<=0 sampling is key-independent argmax, so the
+        # megakernel path may fuse it on-device (decode_step_sample: one
+        # final-norm+logits+argmax kernel instead of a (M,B,V) logits
+        # round-trip through the XLA sampler)
+        self._greedy = temperature <= 0
         self._cache_ax = api.cache_axes(cfg)
         self.decode_steps = max(1, int(decode_steps))
         self.adaptive_horizon = adaptive_horizon
@@ -240,13 +245,22 @@ class MultiModelServer:
         reproduces the historical per-call split sequence)."""
         cfg, eos_id, max_context = self.cfg, self.eos_id, self.max_context
         sample, cache_ax = self._sample, self._cache_ax
+        # greedy + megakernel: decode and sample fused on-device; the key
+        # split below still runs so the key sequence (and thus any
+        # temperature>0 rerun from a checkpointed key) is path-invariant
+        fused_sample = self._greedy and getattr(cfg, "use_pallas_kernels", False)
 
         def _block_impl(params, cache, tok, pos, key, alive, remaining):
             def body(carry, _):
                 tok, pos, cache, key, alive, remaining = carry
-                logits, new_cache = api.decode_step(
-                    cfg, params, cache, tok[..., None], pos
-                )
+                if fused_sample:
+                    picked, new_cache = api.decode_step_sample(
+                        cfg, params, cache, tok[..., None], pos
+                    )
+                else:
+                    logits, new_cache = api.decode_step(
+                        cfg, params, cache, tok[..., None], pos
+                    )
                 if k > 1:
                     # freeze stopped lanes' state between scan steps (at
                     # k == 1 every junk write is overwritten by scatter
@@ -261,7 +275,9 @@ class MultiModelServer:
                 # init-time device_put
                 new_cache = C.constrain_tree(new_cache, cache_ax)
                 key, sub = jax.random.split(key)
-                nxt = jnp.where(alive, sample(logits, sub), tok)
+                nxt = jnp.where(
+                    alive, picked if fused_sample else sample(logits, sub), tok
+                )
                 new_pos = jnp.where(alive, pos + 1, pos)
                 new_rem = jnp.where(alive, remaining - 1, remaining)
                 stop = (new_rem <= 0) | (new_pos >= max_context - 1)

@@ -7,13 +7,16 @@ shapes and reporting achieved FLOP/s and bytes/s against the same
 roofline envelope (``launch/mesh.py`` peaks), so a block-shape tune or
 a kernel rewrite is a measured win, not a vibe.
 
-Five kernels — the fused serving hot spots:
+Seven kernels — the fused serving hot spots:
 
 * ``fused_matmul``       — the merged (M, T, D) @ (M, D, F) projection,
 * ``decode_attn``        — one fused grid decode step's attention,
 * ``chunk_prefill_attn`` — flash attention over [cache, chunk],
 * ``mlstm_chunk``        — chunkwise mLSTM admission scan,
-* ``slstm_cell``         — the sLSTM recurrent cell scan.
+* ``slstm_cell``         — the sLSTM recurrent cell scan,
+* ``decode_layer``       — the whole-dense-decode-layer megakernel
+  (QKV+RoPE, cache append, flash decode, out-proj, both norms, SwiGLU),
+* ``logits_sample``      — fused final-norm + unembed + greedy argmax.
 
 Shapes derive from a ``ModelConfig`` + serving geometry
 (:func:`serving_shapes`), so the profile measures what the engine
@@ -38,7 +41,7 @@ import jax.numpy as jnp
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
 KERNELS = ("fused_matmul", "decode_attn", "chunk_prefill_attn",
-           "mlstm_chunk", "slstm_cell")
+           "mlstm_chunk", "slstm_cell", "decode_layer", "logits_sample")
 
 
 def _nbytes(*arrays) -> int:
@@ -68,6 +71,12 @@ def serving_shapes(cfg, *, slots: int = 4, max_context: int = 128,
                             chunk=min(cfg.mlstm_chunk or 64, chunk)),
         "slstm_cell": dict(m=m, b=prefill_lanes, s=chunk,
                            d=di, h=cfg.num_heads),
+        "decode_layer": dict(m=m, b=slots, d=cfg.d_model, h=cfg.num_heads,
+                             kvh=cfg.num_kv_heads, hd=hd, s=max_context,
+                             ff=cfg.d_ff or 4 * cfg.d_model,
+                             window=cfg.sliding_window or 0),
+        "logits_sample": dict(m=m, b=slots, d=cfg.d_model,
+                              v=cfg.vocab_size),
     }
 
 
@@ -150,12 +159,56 @@ def _mk_slstm_cell(m, b, s, d, h, dtype):
             f"pre({m},{b},{s},4,{d}) H={h}", interpret)
 
 
+def _mk_decode_layer(m, b, d, h, kvh, hd, s, ff, window, dtype):
+    from repro.kernels.decode_layer import decode_layer
+    lp = {
+        "attn_norm": jnp.ones((m, d), dtype),
+        "wq": jnp.ones((m, d, h * hd), dtype),
+        "wk": jnp.ones((m, d, kvh * hd), dtype),
+        "wv": jnp.ones((m, d, kvh * hd), dtype),
+        "wo": jnp.ones((m, h * hd, d), dtype),
+        "mlp_norm": jnp.ones((m, d), dtype),
+        "w_gate": jnp.ones((m, d, ff), dtype),
+        "w_up": jnp.ones((m, d, ff), dtype),
+        "w_down": jnp.ones((m, ff, d), dtype),
+    }
+    x = jnp.ones((m, b, d), dtype)
+    ck = jnp.zeros((m, b, s, kvh, hd), dtype)
+    cv = jnp.zeros((m, b, s, kvh, hd), dtype)
+    pos = jnp.full((m, b), s - 1, jnp.int32)
+    interpret = jax.default_backend() != "tpu"
+    # per lane: qkv proj + attention over the full ring + out proj + swiglu
+    flops = m * b * (2.0 * d * (h + 2 * kvh) * hd + 4.0 * h * hd * s
+                     + 2.0 * h * hd * d + 6.0 * d * ff)
+    return (lambda: decode_layer(lp, x, ck, cv, pos, num_heads=h,
+                                 head_dim=hd, rope_theta=10000.0,
+                                 window=window, interpret=interpret),
+            flops,
+            _nbytes(x, ck, cv, pos, *lp.values())
+            + _nbytes(x, ck, cv),                  # x/cache written back
+            f"x({m},{b},{d}) H={h}/{kvh} S={s} ff={ff}", interpret)
+
+
+def _mk_logits_sample(m, b, d, v, dtype):
+    from repro.kernels.decode_layer import logits_sample
+    x = jnp.ones((m, b, d), dtype)
+    scale = jnp.ones((m, d), dtype)
+    head = jnp.ones((m, d, v), dtype)
+    interpret = jax.default_backend() != "tpu"
+    return (lambda: logits_sample(x, scale, head, interpret=interpret),
+            2.0 * m * b * d * v,
+            _nbytes(x, scale, head) + m * b * 4,
+            f"x({m},{b},{d}) V={v}", interpret)
+
+
 _BUILDERS = {
     "fused_matmul": _mk_fused_matmul,
     "decode_attn": _mk_decode_attn,
     "chunk_prefill_attn": _mk_chunk_prefill_attn,
     "mlstm_chunk": _mk_mlstm_chunk,
     "slstm_cell": _mk_slstm_cell,
+    "decode_layer": _mk_decode_layer,
+    "logits_sample": _mk_logits_sample,
 }
 
 

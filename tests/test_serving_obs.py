@@ -570,7 +570,7 @@ def test_profile_serving_kernels_smoke():
     validate_profile(rows)
     assert [r["kernel"] for r in rows] == [
         "fused_matmul", "decode_attn", "chunk_prefill_attn",
-        "mlstm_chunk", "slstm_cell"]
+        "mlstm_chunk", "slstm_cell", "decode_layer", "logits_sample"]
     for r in rows:
         assert r["bound"] in ("compute", "memory")
         assert r["backend"] == jax.default_backend()
