@@ -47,6 +47,13 @@ under K; dispatch-bound accelerator backends approach K) and
 ~K-fold anywhere).  The headline fused pass runs at ``--decode-steps``
 (default 8).
 
+Recovery (``recovery`` section, DESIGN.md §6.8, ``--fault-plan``): the
+same workload served clean and then under a deterministic fault plan
+with a Supervisor recovering the driver — restart count, watchdog
+timeouts, time-to-recover, tokens replayed, and the acceptance
+invariants validated on every record: ``tokens_lost == 0`` and greedy
+streams byte-identical to the fault-free run.
+
 Observability (``obs`` section, DESIGN.md §6.5): a step-traced pass
 records per-device-call dispatch overhead p50/p95/p99, mean grid
 occupancy, idle-slot token-steps and the tracing on/off throughput A/B;
@@ -418,6 +425,77 @@ def _run_observed(cfg, merged, mesh, args, reqs) -> tuple[dict, dict]:
     return obs, chrome
 
 
+def _run_recovery(cfg, merged, mesh, args, reqs) -> dict:
+    """Fault-injected recovery pass (DESIGN.md §6.8): the same workload
+    served clean (sync baseline) and then under the ``--fault-plan``
+    with a Supervisor recovering the driver — recording restart count,
+    time-to-recover, tokens replayed, and the acceptance invariants:
+    ``tokens_lost == 0`` and byte-identical greedy streams."""
+    from repro.serving import AsyncEngine, FaultInjector, Supervisor
+
+    mk = lambda: [Request(r.instance, list(r.prompt), r.max_new_tokens)
+                  for r in reqs]
+
+    # baseline: fresh server, warmup pass (burns the same request-id
+    # range on both sides so the measured passes' ids align), then the
+    # clean streams
+    base_server = _mk_server(cfg, merged, mesh, args)
+    _drain(base_server, mk())          # compile warmup
+    for r in mk():
+        base_server.submit(r)
+    want = {r.request_id: list(r.tokens)
+            for r in base_server.run_until_drained() if r.status == "ok"}
+
+    # faulted: identical server + plan, warmed BEFORE arming (compiles
+    # must neither consume fault-site call counts nor trip the watchdog)
+    faults = FaultInjector.from_json(args.fault_plan)
+    server = _mk_server(cfg, merged, mesh, args, faults=faults)
+    _drain(server, mk())
+    faults.arm()
+
+    async def run():
+        engine = AsyncEngine(server)
+        sup = Supervisor(
+            engine, seed=args.seed,
+            watchdog_s=(args.watchdog_ms / 1e3
+                        if args.watchdog_ms > 0 else None),
+        )
+        sup.start()
+
+        async def client(r):
+            stream = await engine.submit(r)
+            toks = [t async for t in stream]
+            return stream.request_id, toks, await stream.result()
+
+        t0 = time.perf_counter()
+        out = await asyncio.gather(*(client(r) for r in mk()))
+        wall = time.perf_counter() - t0
+        await engine.aclose()
+        return out, sup, wall
+
+    out, sup, wall = asyncio.run(run())
+    faults.disarm()
+    got = {rid: toks for rid, toks, res in out if res.status == "ok"}
+    tokens_lost = sum(
+        len(toks) - len(got.get(rid, [])) for rid, toks in want.items())
+    snap = sup.snapshot()
+    return {
+        "fault_plan": args.fault_plan,
+        "faults_fired": [list(f) for f in faults.fired],
+        "requests": len(out),
+        "completed": sum(1 for _, _, res in out if res.status == "ok"),
+        "wall_s": wall,
+        "restarts": snap["driver_restarts"],
+        "watchdog_timeouts": snap["watchdog_timeouts"],
+        "request_retries": snap["request_retries"],
+        "tokens_replayed": snap["tokens_replayed"],
+        "retry_budget_exhausted": snap["retry_budget_exhausted"],
+        "time_to_recover_s": snap["last_recovery_s"],
+        "tokens_lost": tokens_lost,
+        "streams_bit_identical": got == want,
+    }
+
+
 _THROUGHPUT_FIELDS = ("tok_per_s", "prefill_tok_per_s", "decode_tok_per_s",
                       "device_calls_per_admission")
 _PCT_KEYS = ("p50", "p95", "p99")
@@ -520,6 +598,25 @@ def validate_record(record: dict) -> None:
     if record.get("kernel_roofline") is not None:
         from repro.serving.obs import validate_profile
         validate_profile(record["kernel_roofline"])
+    # recovery section (--fault-plan runs): the §6.8 acceptance
+    # invariants are part of the record's validity — a recovery that
+    # lost or duplicated tokens fails the bench, not just a test
+    rec = record.get("recovery")
+    if rec is not None:
+        for f in ("restarts", "watchdog_timeouts", "request_retries",
+                  "tokens_replayed", "retry_budget_exhausted",
+                  "tokens_lost", "requests", "completed"):
+            v = rec.get(f)
+            assert isinstance(v, int) and v >= 0, (
+                f"recovery: {f} is not a finite count: {v!r}")
+        assert rec["tokens_lost"] == 0, (
+            f"recovery lost {rec['tokens_lost']} token(s)")
+        assert rec["streams_bit_identical"] is True, (
+            "recovered streams are not bit-identical to the clean run")
+        if rec["restarts"] > 0:
+            v = rec["time_to_recover_s"]
+            assert (isinstance(v, (int, float)) and _math.isfinite(v)
+                    and v >= 0), f"recovery: time_to_recover_s {v!r}"
 
 
 def main():
@@ -568,6 +665,14 @@ def main():
                     help="time each serving Pallas kernel at this config's "
                          "shapes and record achieved-vs-roofline figures "
                          "(record['kernel_roofline'])")
+    ap.add_argument("--fault-plan", default=None, metavar="JSON",
+                    help="run a fault-injected recovery pass (path or "
+                         "inline JSON plan, DESIGN.md §6.8); the record "
+                         "gains a 'recovery' section asserting zero "
+                         "token loss and bit-identical streams")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="watchdog deadline for the recovery pass "
+                         "(0 = crash-recovery only)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -685,6 +790,11 @@ def main():
         print(f"wrote {args.trace_out} "
               f"({len(chrome['traceEvents'])} trace events)")
 
+    # fault-injected recovery pass (DESIGN.md §6.8): only when a plan
+    # is given — restart count, time-to-recover, zero-token-loss proof
+    recovery = (_run_recovery(cfg, merged, mesh, args, reqs)
+                if args.fault_plan else None)
+
     kernel_roofline = None
     if args.profile_kernels:
         from repro.serving.obs import profile_serving_kernels, format_table
@@ -720,6 +830,7 @@ def main():
         "kernel_launches_per_decode_step": kernel_launches,
         "load_gen": load_gen,
         "obs": obs,
+        "recovery": recovery,
         # promoted to top level so perf_delta can diff the dispatch
         # trajectory across PRs without digging into the section
         "dispatch_overhead_ms": obs["dispatch_overhead_ms"],

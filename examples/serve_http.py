@@ -17,7 +17,12 @@ smoke TinyLlama config), exposes it over HTTP on an ephemeral port
   5. GET /metrics shows per-instance TTFT/ITL p50/p95/p99 — as JSON,
      then again with ``Accept: text/plain`` for the Prometheus
      exposition,
-  6. the engine drains gracefully.
+  6. the engine drains gracefully,
+  7. kill-and-recover (DESIGN.md §6.8): a SECOND server boots with a
+     deterministic fault plan that crashes the driver mid-decode; a
+     Supervisor restarts it, requeues the in-flight request with its
+     already-delivered token prefix, and the client's stream comes out
+     bit-identical to the fault-free run — /healthz shows the restart.
 
 Everything is stdlib: asyncio server, asyncio TCP clients, token-id
 prompts (this repro has no tokenizer).
@@ -32,7 +37,8 @@ import jax
 from repro import api
 from repro.configs import registry
 from repro.models import common as C
-from repro.serving import AsyncEngine, MultiModelServer, start_http_server
+from repro.serving import (AsyncEngine, FaultInjector, MultiModelServer,
+                           Supervisor, start_http_server)
 
 M = 2
 
@@ -163,6 +169,54 @@ async def main_async(server):
     print("\ndrained and closed.")
 
 
+async def recover_async(server, inj):
+    """Act 7: crash the driver mid-decode, watch the Supervisor put the
+    stream back together bit-for-bit (DESIGN.md §6.8)."""
+    engine = AsyncEngine(server, max_queue_depth=8)
+    sup = Supervisor(engine, backoff_base_s=0.01)
+    sup.start()
+    http = await start_http_server(engine, port=0)
+    port = http.sockets[0].getsockname()[1]
+    print("\n== kill-and-recover (DESIGN.md §6.8) ==")
+    print(f"  supervised server on 127.0.0.1:{port}, fault plan: crash "
+          f"the driver on its {inj.plan[0].at_call}rd device step")
+
+    # the fault-free reference answer (injector still disarmed)
+    head, rest = await http_roundtrip(port, "POST", "/v1/completions", {
+        "model": "model-0", "prompt": [11, 12, 13], "max_tokens": 6,
+    })
+    want = json.loads(rest)["choices"][0]["tokens"]
+    print(f"  fault-free answer: {want}")
+
+    # arm and run the SAME prompt: the driver dies mid-stream, the
+    # supervisor restarts it and requeues the request with its
+    # delivered prefix — the client just sees tokens keep arriving
+    inj.arm()
+    head, rest = await http_roundtrip(port, "POST", "/v1/completions", {
+        "model": "model-0", "prompt": [11, 12, 13], "max_tokens": 6,
+    })
+    got = json.loads(rest)["choices"][0]["tokens"]
+    print(f"  answer across the crash: {got}")
+    assert got == want, (got, want)
+    print("  bit-identical to the fault-free run "
+          f"(faults fired: {inj.fired})")
+
+    head, rest = await http_roundtrip(port, "GET", "/healthz")
+    h = json.loads(rest)
+    res = h["resilience"]
+    print(f"  /healthz: driver={h['driver']} "
+          f"instance_health={h['instance_health']}")
+    print(f"  restarts={res['driver_restarts']} "
+          f"retries={res['request_retries']} "
+          f"tokens_replayed={res['tokens_replayed']} "
+          f"recovered in {res['last_recovery_s'] * 1e3:.0f} ms")
+
+    http.close()
+    await http.wait_closed()
+    await engine.aclose()
+    print("  recovered, drained and closed.")
+
+
 def main():
     cfg1 = registry.get_smoke_config("tinyllama-1.1b").with_(num_instances=1)
     cfg = cfg1.with_(num_instances=M)
@@ -173,6 +227,13 @@ def main():
                               max_context=64)
     asyncio.run(main_async(server))
     print(server.metrics.format_table())
+
+    # act 7 gets its own engine: a deterministic driver-crash plan
+    inj = FaultInjector.from_plan(
+        {"seed": 0, "faults": [{"site": "driver", "at_call": 3}]})
+    faulted = MultiModelServer(cfg, merged, slots_per_instance=2,
+                               max_context=64, faults=inj)
+    asyncio.run(recover_async(faulted, inj))
 
 
 if __name__ == "__main__":

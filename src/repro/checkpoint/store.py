@@ -52,9 +52,14 @@ def save(path: str | Path, tree: Any, *, extra: dict | None = None) -> None:
     (path / "manifest.json").write_text(json.dumps(manifest, indent=1))
 
 
-def restore(path: str | Path, like: Any) -> Any:
+def restore(path: str | Path, like: Any, *, faults=None) -> Any:
     """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs)."""
+    ShapeDtypeStructs).  ``faults`` is an optional armed
+    :class:`~repro.serving.resilience.faults.FaultInjector`; the
+    ``checkpoint`` site fires before the manifest read (deterministic
+    checkpoint-read failure for the chaos suite)."""
+    if faults is not None and faults.armed:
+        faults.on_call("checkpoint")
     path = Path(path)
     manifest = json.loads((path / "manifest.json").read_text())
     leaves_info = manifest["leaves"]
@@ -72,8 +77,9 @@ def restore(path: str | Path, like: Any) -> Any:
     return jax.tree_util.tree_map_with_path(load, like)
 
 
-def restore_to_shardings(path: str | Path, like: Any, shardings: Any) -> Any:
+def restore_to_shardings(path: str | Path, like: Any, shardings: Any,
+                         *, faults=None) -> Any:
     """Restore and device_put each leaf to its sharding (pytree of
     jax.sharding.Sharding matching ``like``)."""
-    host = restore(path, like)
+    host = restore(path, like, faults=faults)
     return jax.tree.map(lambda x, s: jax.device_put(x, s), host, shardings)

@@ -45,13 +45,43 @@ from repro.serving import MultiModelServer, Request, SERVABLE_FAMILIES
 from repro.serving.scheduler import POLICIES
 
 
-async def _stream_clients(server, reqs, max_queue):
+def _supervise(engine, args):
+    """Wrap the engine in a Supervisor when the run asked for fault
+    tolerance (--fault-plan and/or --watchdog-ms); returns it or None."""
+    if not (args.fault_plan or args.watchdog_ms > 0):
+        return None
+    from repro.serving import Supervisor
+
+    sup = Supervisor(
+        engine,
+        watchdog_s=(args.watchdog_ms / 1e3) if args.watchdog_ms > 0 else None,
+        max_restarts=args.max_restarts, seed=args.seed,
+    )
+    sup.start()
+    return sup
+
+
+def _print_recovery(sup) -> None:
+    if sup is None:
+        return
+    s = sup.snapshot()
+    print(f"supervision: {s['driver_restarts']} restart(s), "
+          f"{s['watchdog_timeouts']} watchdog timeout(s), "
+          f"{s['request_retries']} request requeue(s), "
+          f"{s['tokens_replayed']} token(s) replayed"
+          + (f", last recovery {s['last_recovery_s'] * 1e3:.1f} ms"
+             if s["last_recovery_s"] is not None else ""))
+
+
+async def _stream_clients(server, reqs, max_queue, args):
     """The --stream path: one async client per request, tokens printed
     as each fused engine step lands (the sync path's streams are
-    bit-identical under greedy sampling)."""
+    bit-identical under greedy sampling, even across supervised driver
+    crashes — replayed tokens are never re-printed)."""
     from repro.serving import AsyncEngine
 
     engine = AsyncEngine(server, max_queue_depth=max_queue)
+    sup = _supervise(engine, args)
 
     async def client(r):
         stream = await engine.submit(r)
@@ -61,6 +91,7 @@ async def _stream_clients(server, reqs, max_queue):
 
     results = await asyncio.gather(*(client(r) for r in reqs))
     await engine.aclose()
+    _print_recovery(sup)
     return [r for r in results if r.status == "ok"]
 
 
@@ -71,11 +102,18 @@ def _serve_http(server, args):
 
     async def run():
         engine = AsyncEngine(server, max_queue_depth=args.max_queue)
+        sup = _supervise(engine, args)
         http = await start_http_server(engine, port=args.http)
         addr = http.sockets[0].getsockname()
         print(f"serving HTTP on {addr[0]}:{addr[1]} — "
               f"POST /v1/completions (model-0..model-{server.m - 1}, "
               f"prompt = token ids, \"stream\": true for SSE), GET /metrics")
+        if sup is not None:
+            print(f"supervised: watchdog="
+                  f"{args.watchdog_ms or 'off'} ms, "
+                  f"max_restarts={args.max_restarts}"
+                  + (f", fault plan armed ({args.fault_plan})"
+                     if args.fault_plan else ""))
         try:
             async with http:
                 await http.serve_forever()
@@ -85,6 +123,7 @@ def _serve_http(server, args):
             http.close()
             await http.wait_closed()
             await engine.aclose()          # graceful drain
+            _print_recovery(sup)
 
     try:
         asyncio.run(run())
@@ -140,6 +179,19 @@ def main():
     ap.add_argument("--max-queue", type=int, default=0,
                     help="per-instance queue bound for the async frontend "
                          "(0 = unbounded); full queues answer HTTP 429")
+    ap.add_argument("--fault-plan", default=None, metavar="JSON",
+                    help="deterministic fault plan (DESIGN.md §6.8): a "
+                         "path to a JSON file or inline JSON, e.g. "
+                         "'{\"seed\": 0, \"faults\": [{\"site\": "
+                         "\"driver\", \"at_call\": 3}]}'; armed for the "
+                         "whole run — with --stream/--http a Supervisor "
+                         "recovers the driver")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="supervised per-device-step deadline in ms for "
+                         "the async paths (0 = no watchdog); steps that "
+                         "overrun are treated as stalls and recovered")
+    ap.add_argument("--max-restarts", type=int, default=5,
+                    help="supervisor restart budget before giving up")
     ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
                     help="capture a step trace of the run and write it as "
                          "Chrome-trace JSON (Perfetto / chrome://tracing); "
@@ -178,14 +230,22 @@ def main():
     if mesh is not None:
         print(f"serving mesh: {dict(mesh.shape)} over {mesh.size} devices")
 
+    faults = None
+    if args.fault_plan:
+        from repro.serving import FaultInjector
+        faults = FaultInjector.from_json(args.fault_plan)
+        print(f"fault plan: {len(faults.plan)} spec(s), seed {faults.seed}")
+
     server = MultiModelServer(
         cfg, merged, slots_per_instance=args.slots, max_context=max_context,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         scheduler=args.policy, prefill_chunk=args.chunk,
         prefill_lanes=args.lanes, chunk_budget=args.chunk_budget,
         tail_fold=not args.no_tail_fold, mesh=mesh,
-        decode_steps=args.decode_steps,
+        decode_steps=args.decode_steps, faults=faults,
     )
+    if faults is not None:
+        faults.arm()
     if args.http:
         _serve_http(server, args)
         return
@@ -204,7 +264,8 @@ def main():
         server.tracer.start()
     t0 = time.perf_counter()
     if args.stream:
-        results = asyncio.run(_stream_clients(server, reqs, args.max_queue))
+        results = asyncio.run(
+            _stream_clients(server, reqs, args.max_queue, args))
     else:
         for r in reqs:
             server.submit(r)

@@ -9,6 +9,15 @@ from repro.serving.frontend import (
 from repro.serving.metrics import ServerMetrics
 from repro.serving.obs import Tracer, render_prometheus
 from repro.serving.prefill import ChunkedPrefill, PrefillOut
+from repro.serving.resilience import (
+    BrownoutPolicy,
+    FaultInjected,
+    FaultInjector,
+    FaultSpec,
+    HealthMonitor,
+    Supervisor,
+    WatchdogTimeout,
+)
 from repro.serving.sampling import sample_tokens
 from repro.serving.scheduler import (
     POLICIES,

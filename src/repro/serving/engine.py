@@ -82,6 +82,8 @@ from repro.models import common as C
 from repro.serving.metrics import ServerMetrics
 from repro.serving.obs.trace import Tracer
 from repro.serving.prefill import ChunkedPrefill
+from repro.serving.resilience.faults import FaultInjector
+from repro.serving.resilience.health import HealthMonitor
 from repro.serving.sampling import make_grid_sampler
 from repro.serving.scheduler import Request, Result, Scheduler, make_scheduler
 
@@ -113,6 +115,9 @@ class MultiModelServer:
         mesh=None,
         rules=None,
         tracer: Tracer | None = None,
+        faults: FaultInjector | None = None,
+        health: HealthMonitor | None = None,
+        policy=None,
     ):
         assert cfg.family in SERVABLE_FAMILIES, cfg.family
         if cfg.family == "hybrid":
@@ -141,6 +146,18 @@ class MultiModelServer:
         # every hot-path call site guards on ``tracer.enabled``, so the
         # disabled path reads one attribute and constructs nothing
         self.tracer = tracer if tracer is not None else Tracer()
+        # fault injection (DESIGN.md §6.8): same discipline as the tracer
+        # — always attached, disarmed by default, and every call site
+        # guards on ``faults.armed`` so the disarmed path runs zero
+        # injector code
+        self.faults = faults if faults is not None else FaultInjector()
+        # per-instance health states (always on — plain counters)
+        self.health = health if health is not None else HealthMonitor(self.m)
+        # overload brownout policy (optional: None = no shedding/capping)
+        self.policy = policy
+        # terminal Results produced while an exception was propagating
+        # (e.g. a donated scatter failure) — delivered on the next step
+        self._pending_failures: list[Result] = []
         self.prefill = ChunkedPrefill(
             cfg, max_context=max_context, chunk=prefill_chunk,
             lanes=prefill_lanes, metrics=self.metrics,
@@ -191,9 +208,11 @@ class MultiModelServer:
         # async frontend buffers these and fans them out to per-request
         # streams.  Host-side only; the device program never changes
         self.on_token = None
+        self._seed = seed
         self._key = jax.random.PRNGKey(seed)
         if mesh is not None:
             self._key = jax.device_put(self._key, self._rep_shard)
+        self.metrics.health_fn = self.health.snapshot
 
         self._sample = make_grid_sampler(temperature, top_k)
         # temperature<=0 sampling is key-independent argmax, so the
@@ -241,6 +260,10 @@ class MultiModelServer:
         position reaching ``max_context - 1``.  Returns the (k, M, B)
         token block, the (k, M, B) emitted mask (alive at entry of each
         scan step — exactly the tokens the host unroll consumes), the
+        (k, M, B) finite-logits mask (the NaN/Inf guard: False where an
+        instance's logits went non-finite, so the host can quarantine
+        that row instead of streaming garbage; the fused megakernel
+        path never materializes logits, so it reports all-True), the
         cache, and the advanced key (one split per scan step, so K=1
         reproduces the historical per-call split sequence)."""
         cfg, eos_id, max_context = self.cfg, self.eos_id, self.max_context
@@ -257,10 +280,14 @@ class MultiModelServer:
                     picked, new_cache = api.decode_step_sample(
                         cfg, params, cache, tok[..., None], pos
                     )
+                    ok = jnp.ones_like(alive)
                 else:
                     logits, new_cache = api.decode_step(
                         cfg, params, cache, tok[..., None], pos
                     )
+                    ok = jnp.all(
+                        jnp.isfinite(logits), axis=-1
+                    ).reshape(alive.shape)
                 if k > 1:
                     # freeze stopped lanes' state between scan steps (at
                     # k == 1 every junk write is overwritten by scatter
@@ -285,13 +312,13 @@ class MultiModelServer:
                     stop = stop | (nxt == eos_id)
                 new_carry = (nxt, new_pos, new_cache, key,
                              alive & ~stop, new_rem)
-                return new_carry, (nxt, alive)
+                return new_carry, (nxt, alive, ok)
 
             carry = (tok, pos, cache, key, alive, remaining)
-            (_, _, cache, key, _, _), (toks, emitted) = jax.lax.scan(
+            (_, _, cache, key, _, _), (toks, emitted, oks) = jax.lax.scan(
                 body, carry, None, length=k
             )
-            return toks, emitted, cache, key
+            return toks, emitted, oks, cache, key
 
         # donate the grid cache so decode updates in place instead of
         # copying the whole (M, B, max_context) grid (skipped on CPU,
@@ -357,6 +384,19 @@ class MultiModelServer:
                 prompt_len=len(req.prompt) if req.prompt else 0,
                 status="rejected", error=err,
             )
+        # a quarantined instance row 503s only its own tenant: the other
+        # M-1 instances keep admitting (DESIGN.md §6.8)
+        if not self.health.admissible(req.instance):
+            self.metrics.note_reject(req.instance)
+            return Result(
+                req.request_id, req.instance, [],
+                prompt_len=len(req.prompt),
+                status="unavailable",
+                error=f"instance {req.instance} is quarantined "
+                      f"({self.health.state(req.instance)}); retry later",
+            )
+        if self.policy is not None:
+            self.policy.cap_request(req)     # brownout: shorter answers
         self.scheduler.submit(req)
         self.metrics.note_submit(req.instance)
         if self.tracer.enabled:
@@ -438,8 +478,12 @@ class MultiModelServer:
         """Move pending requests into prefill lanes, reserving a grid
         slot for each (the slot starts decoding once its chunks land)."""
         lanes = self.prefill.free_lanes()
+        # a quarantined row offers zero free slots: the scheduler stops
+        # admitting to it, its queue simply waits out the quarantine
         free = {
-            i: int(self.b - self.slot_busy[i].sum()) for i in range(self.m)
+            i: (int(self.b - self.slot_busy[i].sum())
+                if self.health.admissible(i) else 0)
+            for i in range(self.m)
         }
         if lanes == 0 or not any(free.values()) \
                 or self.scheduler.total_pending() == 0:
@@ -458,17 +502,85 @@ class MultiModelServer:
                 self.tracer.request_event(req.request_id, "admit",
                                           instance=m)
 
-    def _finish_prefills(self, completed) -> None:
+    def _fail_slot(self, req: Request, m: int, b: int, exc,
+                   *, poisoned: bool = False) -> Result:
+        """Terminally fail an admitted request and restore its slot/lane
+        bookkeeping — a failed device call either frees the slot or
+        fails the request, never leaks either (exception-safe ``step``,
+        DESIGN.md §6.8)."""
+        rid = req.request_id
+        self._reserved.pop(rid, None)
+        if self.slot_prefilling[m, b]:
+            self.prefill.abort(rid)
+        self.slot_busy[m, b] = False
+        self.slot_prefilling[m, b] = False
+        self.active[m][b] = None
+        gen = self.generated.pop(rid, [])
+        if poisoned:
+            before = self.health.state(m)
+            self.health.note_poisoned(m)
+        else:
+            before = self.health.state(m)
+            self.health.note_failure(m)
+        self.metrics.note_failed(m, request_id=rid)
+        if self.tracer.enabled:
+            self.tracer.request_event(rid, "finish", instance=m,
+                                      status="error")
+            if before != "quarantined" and self.health.state(m) == \
+                    "quarantined":
+                self.tracer.request_event(
+                    rid, "quarantine", instance=m,
+                    status="poisoned" if poisoned else "failures")
+        return Result(
+            rid, m, gen, prompt_len=len(req.prompt),
+            latency_s=time.perf_counter() - req.submit_time,
+            status="error", error=f"{type(exc).__name__}: {exc}",
+        )
+
+    def _fail_prefilling(self, exc) -> list[Result]:
+        """A chunked-prefill pass failed.  Chunks are lane-batched into
+        one device call, so the failure cannot be attributed to a single
+        lane: every mid-prefill request fails terminally and the lane
+        runtime is rebuilt (the failed call may have invalidated the
+        donated chunk carry)."""
+        failures = []
+        rids = sorted(
+            rid for rid, (m, b) in self._reserved.items()
+            if self.slot_prefilling[m, b]
+        )
+        for rid in rids:
+            m, b = self._reserved[rid]
+            failures.append(self._fail_slot(self.active[m][b], m, b, exc))
+        self.prefill.reset()
+        return failures
+
+    def _finish_prefills(self, completed) -> list[Result]:
         """Scatter completed prefill lanes into their reserved slots and
-        flip them to decoding."""
+        flip them to decoding.  Returns terminal Results for requests
+        whose scatter failed (their slots are freed, not leaked)."""
         tr = self.tracer
+        failures: list[Result] = []
         for req, out in completed:
-            m, b = self._reserved.pop(req.request_id)
+            m, b = self._reserved[req.request_id]
             trace_on = tr.enabled
             if trace_on:
                 t0 = time.perf_counter()
-            with self._ctx():
-                self.cache = self._scatter(self.cache, out.cache, out.index, m, b)
+            try:
+                if self.faults.armed:
+                    self.faults.on_call("scatter")
+                with self._ctx():
+                    self.cache = self._scatter(
+                        self.cache, out.cache, out.index, m, b)
+            except Exception as exc:
+                failures.append(self._fail_slot(req, m, b, exc))
+                if self.prefill.donate:
+                    # the failed donated call may have invalidated the
+                    # grid cache buffer — not locally recoverable; the
+                    # supervisor rebuilds it via reset_serving_state
+                    self._pending_failures.extend(failures)
+                    raise
+                continue
+            self._reserved.pop(req.request_id)
             self.metrics.note_scatter()
             if trace_on:
                 t1 = time.perf_counter()
@@ -486,6 +598,7 @@ class MultiModelServer:
             self.cur_tok[m, b] = out.last_token
             self.slot_prefilling[m, b] = False
             self.generated[req.request_id] = []
+        return failures
 
     # -- engine step ----------------------------------------------------------
 
@@ -530,20 +643,31 @@ class MultiModelServer:
         (k, M, B) tokens on the host, collect finished slots.
         Prefilling slots ride the grid as idle (masked) lanes, so long
         prompts admit without stalling decode."""
+        out: list[Result] = self._pending_failures
+        self._pending_failures = []
+        if self.policy is not None:
+            out.extend(self._apply_policy())
         self._admit()
         if self.prefill.in_flight():
             t0 = time.perf_counter()
-            completed = self.prefill.advance(self.params, self.chunk_budget,
-                                             step=self.steps)
+            try:
+                if self.faults.armed:
+                    self.faults.on_call("prefill")
+                completed = self.prefill.advance(
+                    self.params, self.chunk_budget, step=self.steps)
+            except Exception as exc:
+                out.extend(self._fail_prefilling(exc))
+                completed = []
             stall = time.perf_counter() - t0
             # decode-ready slots sat idle for this long while admission
             # chunks ran — the quantity the chunk budget bounds
             if (self.slot_busy & ~self.slot_prefilling).any():
                 self.metrics.note_admission_stall(stall)
-            self._finish_prefills(completed)
+            out.extend(self._finish_prefills(completed))
         decoding = self.slot_busy & ~self.slot_prefilling
         if not decoding.any():
-            return []
+            self.health.note_step()
+            return out
         k = self._decode_horizon()
         # per-slot decode budget for the on-device stop mask: a lane
         # whose budget (or EOS / context) hits mid-block freezes there
@@ -564,11 +688,17 @@ class MultiModelServer:
             grid_put = jnp.asarray
         tok_dev, pos_dev = grid_put(self.cur_tok), grid_put(self.pos)
         alive_dev, rem_dev = grid_put(decoding), grid_put(remaining)
+        # fault hook BEFORE the dispatch: an injected raise/stall lands
+        # while host state is still consistent (no half-applied block),
+        # so a supervisor reset + requeue replays cleanly
+        poison = (
+            self.faults.on_call("decode") if self.faults.armed else ()
+        )
         tr = self.tracer
         trace_on = tr.enabled
         t0 = time.perf_counter()
         with self._ctx():
-            toks, emitted, self.cache, self._key = self._step(
+            toks, emitted, oks, self.cache, self._key = self._step(
                 self.params, self.cache, tok_dev, pos_dev, self._key,
                 alive_dev, rem_dev, k,
             )
@@ -578,9 +708,16 @@ class MultiModelServer:
         self.steps += 1
         # device_get blocks until the fused block's tokens land: the
         # settled timestamp is end-to-end device-call wall time
-        toks, emitted = jax.device_get((toks, emitted))
+        toks, emitted, oks = jax.device_get((toks, emitted, oks))
         t_settled = time.perf_counter()
         toks, emitted = np.asarray(toks), np.asarray(emitted)
+        oks = np.array(oks)
+        for i in poison:
+            # injected NaN: flip the guard for row i exactly as real
+            # non-finite logits would (real NaN in the cache would
+            # poison every later step — the guard flip is the faithful,
+            # recoverable stand-in)
+            oks[:, i, :] = False
         block_tokens = int(emitted.sum())
         self.metrics.note_decode_call(steps=k, tokens=block_tokens,
                                       wall_s=t_settled - t0,
@@ -612,12 +749,37 @@ class MultiModelServer:
                     if not (decoding[m, b] and self.slot_busy[m, b]):
                         continue
                     req = self.active[m][b]
+                    if not oks[j, m, b]:
+                        # NaN/Inf guard tripped for this row: fail the
+                        # request and quarantine the instance — the
+                        # other M-1 rows stream on untouched
+                        done.append(self._fail_slot(
+                            req, m, b,
+                            RuntimeError("non-finite logits "
+                                         "(NaN/Inf token guard)"),
+                            poisoned=True,
+                        ))
+                        continue
                     t = int(toks[j, m, b])
                     gen = self.generated[req.request_id]
-                    self.metrics.note_token(
-                        m, first=not gen, submit_time=req.submit_time,
-                        request_id=req.request_id,
-                    )
+                    # recovery replay (DESIGN.md §6.8): the first
+                    # ``emit_skip`` tokens were already delivered to the
+                    # client before a crash — greedy decode regenerates
+                    # them bit-identically, and the engine suppresses
+                    # their re-emission so the client-visible stream has
+                    # no duplicates
+                    replay = len(gen) < req.emit_skip
+                    if replay:
+                        exp = req.replay_expect
+                        if exp is not None and exp[len(gen)] != t:
+                            self.metrics.replay_mismatches += 1
+                        self.metrics.note_replay(m)
+                    else:
+                        self.metrics.note_token(
+                            m, first=not gen and not req.emit_skip,
+                            submit_time=req.submit_time,
+                            request_id=req.request_id,
+                        )
                     self.scheduler.note_generated(m, 1)
                     gen.append(t)
                     self.pos[m, b] += 1
@@ -628,7 +790,7 @@ class MultiModelServer:
                         or hit_eos
                         or int(self.pos[m, b]) >= self.max_context - 1
                     )
-                    if self.on_token is not None:
+                    if self.on_token is not None and not replay:
                         self.on_token(req.request_id, t, finished)
                     if finished:
                         done.append(Result(
@@ -639,21 +801,120 @@ class MultiModelServer:
                         ))
                         self.metrics.note_complete(m, req.submit_time,
                                                    request_id=req.request_id)
+                        self.health.note_success(m)
                         if trace_on:
                             tr.request_event(req.request_id, "finish",
                                              instance=m, status="ok")
                         self.slot_busy[m, b] = False
                         self.active[m][b] = None
                         del self.generated[req.request_id]
-        return done
+        self.health.note_step()
+        out.extend(done)
+        return out
+
+    # -- overload brownout (DESIGN.md §6.8) -----------------------------------
+
+    def _apply_policy(self) -> list[Result]:
+        """One step's brownout bookkeeping: feed queue depth to the
+        degraded-mode hysteresis and shed queued requests older than the
+        policy's age cutoff (their clients have likely given up)."""
+        pol = self.policy
+        pol.note_depth(self.scheduler.total_pending())
+        if pol.shed_age_s is None:
+            return []
+        now = time.perf_counter()
+        out = []
+        for req in self.scheduler.shed_older_than(now - pol.shed_age_s):
+            pol.shed_total += 1
+            self.metrics.note_shed(req.instance)
+            if self.tracer.enabled:
+                self.tracer.request_event(req.request_id, "shed",
+                                          instance=req.instance)
+            out.append(Result(
+                req.request_id, req.instance, [],
+                prompt_len=len(req.prompt),
+                latency_s=now - req.submit_time, status="shed",
+                error=f"queued longer than {pol.shed_age_s}s under "
+                      f"overload; retry later",
+            ))
+        return out
+
+    # -- crash recovery (DESIGN.md §6.8) --------------------------------------
+
+    def reset_serving_state(self) -> list[tuple[Request, list[int]]]:
+        """Post-crash recovery: tear the serving state back to empty —
+        fresh grid cache, zeroed slot bookkeeping, cleared prefill
+        lanes, reseeded sampling key — WITHOUT touching compiled
+        programs, the request-id counter, or cumulative metrics.
+        Returns every live (queued, prefilling, or decoding) request
+        with its generated-token prefix, sorted by request_id, for the
+        supervisor to ``requeue``."""
+        live: list[tuple[Request, list[int]]] = []
+        for m in range(self.m):
+            for b in range(self.b):
+                req = self.active[m][b]
+                if req is not None:
+                    live.append(
+                        (req, list(self.generated.get(req.request_id, []))))
+                self.active[m][b] = None
+        for req in self.scheduler.drain_all():
+            live.append((req, []))
+        live.sort(key=lambda t: t[0].request_id)
+        self._reserved.clear()
+        self.generated.clear()
+        self._pending_failures = []
+        self.pos[:] = 0
+        self.cur_tok[:] = 0
+        self.slot_busy[:] = False
+        self.slot_prefilling[:] = False
+        self.prefill.reset()
+        self.metrics.reset_queue_depths()
+        with self._ctx():
+            cache = api.make_cache(self.cfg, self.m, self.b,
+                                   self.max_context)
+        key = jax.random.PRNGKey(self._seed)
+        if self.mesh is not None:
+            from repro.launch.shardings import tree_shardings
+            cache = jax.device_put(
+                cache, tree_shardings(self.rules, self._cache_ax, cache))
+            key = jax.device_put(key, self._rep_shard)
+        self.cache = cache
+        self._key = key
+        return live
+
+    def requeue(self, req: Request, *,
+                emitted: list[int] | None = None) -> int:
+        """Re-enter a recovered request under its ORIGINAL request_id
+        and submit_time (no re-validation — it was validated once).
+        ``emitted`` is the token prefix the client already received:
+        greedy decode regenerates it bit-identically (a greedy stream
+        depends only on its own prompt) and the engine suppresses its
+        re-emission via ``emit_skip``, so the client-visible stream
+        resumes exactly where it broke — no duplication, no loss."""
+        assert req.request_id >= 0, "requeue() needs a submitted request"
+        if emitted:
+            req.emit_skip = len(emitted)
+            req.replay_expect = list(emitted)
+        else:
+            req.emit_skip = 0
+            req.replay_expect = None
+        self.scheduler.submit(req)
+        self.metrics.note_requeue(req.instance)
+        if self.tracer.enabled:
+            self.tracer.request_event(req.request_id, "requeue",
+                                      instance=req.instance)
+        return req.request_id
 
     def reset_metrics(self) -> ServerMetrics:
         """Fresh counters/sample windows (e.g. after a compile warmup,
         so recorded percentiles carry no warmup outliers); re-points
         every subsystem holding the metrics object."""
+        old = self.metrics
         self.metrics = ServerMetrics(self.m, mesh=self.mesh)
         self.metrics.compiled_shapes_fn = \
             lambda: self.prefill.compiled_shapes
+        self.metrics.health_fn = self.health.snapshot
+        self.metrics.resilience_fn = old.resilience_fn
         self.prefill.metrics = self.metrics
         return self.metrics
 

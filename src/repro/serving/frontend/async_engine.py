@@ -95,10 +95,15 @@ class TokenStream:
         self._result: Result | None = None
         self._done = asyncio.Event()
         self._exhausted = False
+        # every token delivered to this client, in order — the exact
+        # client-visible prefix crash recovery must not re-send: the
+        # Supervisor requeues from it (DESIGN.md §6.8)
+        self.emitted: list[int] = []
 
     # -- driver side ---------------------------------------------------------
 
     def _push_token(self, tok: int) -> None:
+        self.emitted.append(tok)
         self._q.put_nowait(tok)
 
     def _push_terminal(self, res: Result) -> None:
@@ -159,6 +164,21 @@ class AsyncEngine:
         self._space: asyncio.Condition | None = None
         self._driver: asyncio.Task | None = None
         self._closing = False
+        # live Request objects by id — what crash recovery requeues
+        # (the engine's own bookkeeping dies with the crash)
+        self._requests: dict[int, Request] = {}
+        # supervised lifecycle (resilience/supervisor.py): when True the
+        # Supervisor owns driver death — the driver leaves streams,
+        # commands and request records intact for recovery instead of
+        # failing them, and only the Supervisor restarts it
+        self.supervised = False
+        self._supervisor = None
+        # watchdog instrumentation: loop-clock timestamp when the
+        # current device step entered the executor (None between steps),
+        # and the step's concurrent.futures handle (recovery awaits it —
+        # a stalled executor thread cannot be killed, only waited out)
+        self._step_started: float | None = None
+        self._step_future = None
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -168,12 +188,21 @@ class AsyncEngine:
             self._wake = asyncio.Event()
             self._space = asyncio.Condition()
         # never resurrect a closed/failed driver (its finally sets
-        # _closing): submit raises EngineClosed, cancel returns False
+        # _closing): submit raises EngineClosed, cancel returns False.
+        # Under supervision a dead driver is the Supervisor's to restart
+        # — resurrecting it here would race the recovery requeue
         if self._closing:
             return
-        if self._driver is None or self._driver.done():
+        if self._driver is None or (self._driver.done()
+                                    and not self.supervised):
             self._driver = self._loop.create_task(
                 self._drive(), name="engine-driver")
+
+    def _restart_driver(self) -> None:
+        """(Supervisor-only) start a fresh driver task after recovery."""
+        self._driver = self._loop.create_task(
+            self._drive(), name="engine-driver")
+        self._wake.set()
 
     async def __aenter__(self) -> "AsyncEngine":
         self._ensure_started()
@@ -182,24 +211,41 @@ class AsyncEngine:
     async def __aexit__(self, *exc) -> None:
         await self.aclose(drain=exc == (None, None, None))
 
+    async def _await_stopped(self) -> None:
+        """Wait for the step loop to be truly over.  A driver that died
+        on an exception already delivered it to every waiter (terminal
+        ``status="error"`` Results, ``EngineClosed`` futures), so drain/
+        aclose RETURN instead of re-raising — nobody hangs on a queue no
+        driver drains, and nobody gets the failure twice.  Under
+        supervision, "over" means the Supervisor stopped (clean drain or
+        gave up), not any single driver incarnation's death."""
+        if self._supervisor is not None and self._supervisor.stopped is not None:
+            await self._supervisor.stopped.wait()
+            return
+        if self._driver is not None:
+            try:
+                await self._driver
+            except BaseException:
+                pass
+
     async def drain(self) -> None:
         """Stop accepting submissions; wait until every in-flight request
         reached its terminal Result and the driver exited."""
         self._ensure_started()
         self._closing = True
         self._wake.set()
-        await self._driver
+        await self._await_stopped()
 
     async def aclose(self, *, drain: bool = True) -> None:
         """Shut the frontend down: graceful (default — in-flight work
         finishes) or immediate (``drain=False`` — live requests are
         cancelled, their streams end with ``status="cancelled"``)."""
-        if self._driver is None or self._driver.done():
+        if self._driver is None or (self._driver.done()
+                                    and not self.supervised):
             self._closing = True
             if self.server.on_token is self._hook:
                 self.server.on_token = None
-            if self._driver is not None:
-                await self._driver
+            await self._await_stopped()
             return
         self._closing = True
         if not drain:
@@ -207,7 +253,7 @@ class AsyncEngine:
             # between steps, never while the engine is mid-device-call
             self._commands.append(("abort_all",))
         self._wake.set()
-        await self._driver
+        await self._await_stopped()
 
     # -- client API ----------------------------------------------------------
 
@@ -264,13 +310,18 @@ class AsyncEngine:
 
     def driver_status(self) -> str:
         """Liveness of the driver task (the /healthz signal):
-        ``not-started`` / ``running`` / ``stopped`` (clean exit) /
-        ``failed`` (died on an exception — the engine is wedged and the
+        ``not-started`` / ``running`` / ``recovering`` (died under
+        supervision — a restart is coming) / ``stopped`` (clean exit) /
+        ``failed`` (died unsupervised — the engine is wedged and the
         HTTP layer serves 503)."""
         if self._driver is None:
             return "not-started"
         if not self._driver.done():
             return "running"
+        sup = self._supervisor
+        if (self.supervised and sup is not None and sup.stopped is not None
+                and not sup.stopped.is_set()):
+            return "recovering"
         if self._driver.cancelled():
             return "failed"
         return "failed" if self._driver.exception() is not None else "stopped"
@@ -337,9 +388,21 @@ class AsyncEngine:
 
     def _finish(self, res: Result) -> None:
         self._deadlines.pop(res.request_id, None)
+        self._requests.pop(res.request_id, None)
         stream = self._streams.pop(res.request_id, None)
         if stream is not None:
             stream._push_terminal(res)
+
+    def _fail_pending_commands(self, err: str) -> None:
+        """Fail every queued command's future (driver death / supervisor
+        give-up): submit/cancel/call waiters get :class:`EngineClosed`
+        instead of hanging on a future no driver will ever resolve."""
+        while self._commands:
+            cmd = self._commands.popleft()
+            fut = cmd[-1]
+            if asyncio.isfuture(fut) and not fut.done():
+                fut.set_exception(EngineClosed(err))
+        self._pending_submits.clear()
 
     def _apply_commands(self) -> None:
         while self._commands:
@@ -364,6 +427,7 @@ class AsyncEngine:
                 else:
                     stream = TokenStream(out, inst, self)
                     self._streams[out] = stream
+                    self._requests[out] = request
                     if deadline is not None:
                         self._deadlines[out] = deadline
                 if not fut.cancelled():
@@ -426,9 +490,26 @@ class AsyncEngine:
                     await self._wake.wait()
                     continue
                 del self._tok_buf[:]
+                # driver-site fault hook: counted once per device step
+                # (not per loop iteration — idle wakeups depend on event
+                # loop timing and would break schedule determinism) and
+                # fired BEFORE dispatch, so a crash here leaves host
+                # state consistent for replay
+                inj = getattr(self.server, "faults", None)
+                if inj is not None and inj.armed:
+                    inj.on_call("driver")
                 # the ONLY device work in the frontend: one synchronous
-                # engine step, off the loop thread
-                done = await loop.run_in_executor(None, self.server.step)
+                # engine step, off the loop thread.  _step_started feeds
+                # the Supervisor's watchdog; _step_future lets recovery
+                # wait out a step already in flight (an executor thread
+                # cannot be killed, only awaited)
+                self._step_started = loop.time()
+                self._step_future = loop.run_in_executor(
+                    None, self.server.step)
+                try:
+                    done = await self._step_future
+                finally:
+                    self._step_started = None
                 for rid, tok in self._tok_buf:
                     stream = self._streams.get(rid)
                     if stream is not None:
@@ -437,27 +518,35 @@ class AsyncEngine:
                     self._finish(res)
                 await self._notify_space()
         except BaseException as e:
-            # fail loudly but leave no waiter hanging: pending commands
-            # and live streams all observe the error
-            for cmd in self._commands:
-                fut = cmd[-1]
-                if asyncio.isfuture(fut) and not fut.done():
-                    fut.set_exception(
-                        RuntimeError(f"engine driver failed: {e!r}"))
-            self._commands.clear()
+            if self.supervised:
+                # the Supervisor owns driver death: leave streams,
+                # request records and queued commands intact — recovery
+                # requeues every live request with its emitted prefix
+                # and the restarted driver applies the surviving
+                # commands
+                raise
+            # unsupervised: fail loudly but leave no waiter hanging —
+            # pending commands and live streams all observe the error,
+            # each stream keeping the tokens already delivered
+            err = f"engine driver failed: {e!r}"
+            self._fail_pending_commands(err)
             for rid in list(self._streams):
+                stream = self._streams[rid]
                 self._finish(Result(
-                    rid, self._streams[rid].instance, [],
-                    status="cancelled", error=f"engine driver failed: {e!r}",
+                    rid, stream.instance, list(stream.emitted),
+                    status="error", error=err,
                 ))
             raise
         finally:
-            self._closing = True
-            # detach the token hook however the driver exits (drain,
-            # aclose, failure): a dead engine's _tok_buf must not keep
-            # accumulating tokens from later synchronous serving, and
-            # the identity guard never silences a NEWER AsyncEngine
-            # attached to the same server
-            if self.server.on_token is self._hook:
-                self.server.on_token = None
+            if not self.supervised:
+                self._closing = True
+                # detach the token hook however the driver exits (drain,
+                # aclose, failure): a dead engine's _tok_buf must not
+                # keep accumulating tokens from later synchronous
+                # serving, and the identity guard never silences a NEWER
+                # AsyncEngine attached to the same server.  Supervised
+                # drivers keep both — the Supervisor restarts the loop
+                # and detaches only on final shutdown/give-up
+                if self.server.on_token is self._hook:
+                    self.server.on_token = None
             await self._notify_space()

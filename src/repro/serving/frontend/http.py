@@ -25,8 +25,13 @@ fused (M, B) engine to network clients:
   exposition instead — same counters, scrapable.
 * ``POST /metrics/reset`` — zero the metrics window (applied between
   engine steps; cumulative compiled-shape counts survive).
-* ``GET /healthz`` — driver-task liveness, per-instance queue depths,
-  in-flight request count; answers 503 once the driver task has died.
+* ``GET /healthz`` — driver-task liveness, per-instance queue depths
+  and health states (healthy/degraded/quarantined/probation, §6.8),
+  in-flight request count, and supervision counters; answers 503 once
+  the driver task has died unsupervised (a supervised driver mid-
+  recovery reports ``"recovering"`` and stays 200).  Requests routed
+  to a quarantined instance answer 503 + ``Retry-After`` — the other
+  M−1 instances are unaffected.
 * ``GET /debug/trace`` — the step tracer's capture as Chrome-trace
   JSON (load in Perfetto / chrome://tracing); ``POST
   /debug/trace/start`` / ``/debug/trace/stop`` toggle capture on the
@@ -134,6 +139,14 @@ def _error(writer, status: int, message: str, extra=(), **fields) -> None:
 # -- /v1/completions ---------------------------------------------------------
 
 
+def _retry_after(engine: AsyncEngine) -> str:
+    """Retry-After hint (seconds, integer-formatted) from the engine's
+    brownout policy; 1s when no policy is wired."""
+    pol = getattr(engine.server, "policy", None)
+    secs = pol.retry_after_s if pol is not None else 1.0
+    return str(max(1, int(round(secs))))
+
+
 def _resolve_instance(model, model_map: dict[str, int], m: int):
     if isinstance(model, bool):        # JSON true/false is an int subclass
         return None
@@ -201,13 +214,26 @@ async def _completions(engine: AsyncEngine, model_map, payload,
         )
     except Backpressure as e:
         _error(writer, 429, str(e), queue_depth=e.depth,
-               queue_limit=e.limit, extra=(("Retry-After", "1"),))
+               queue_limit=e.limit,
+               extra=(("Retry-After", _retry_after(engine)),))
         return
     except EngineClosed as e:
         # connection accepted during graceful shutdown (or after a
         # driver failure): answer, don't drop the socket
         _error(writer, 503, str(e))
         return
+
+    # quarantine / brownout rejections are born terminal: answer 503
+    # with a Retry-After BEFORE committing to a 200/SSE response, so
+    # load balancers see a retryable signal while the other M-1
+    # instances keep serving 200s
+    if stream.done():
+        res = await stream.result()
+        if res.status in ("unavailable", "shed"):
+            _error(writer, 503, res.error, request_id=res.request_id,
+                   reason=res.status,
+                   extra=(("Retry-After", _retry_after(engine)),))
+            return
 
     if not payload.get("stream", False):
         # same abandonment policy as the SSE branch: a client that went
@@ -336,8 +362,12 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
             elif path == "/healthz" and method == "GET":
                 status = engine.driver_status()
                 # a failed driver means no step will ever run again:
-                # the load balancer must stop routing here
+                # the load balancer must stop routing here.  A
+                # "recovering" driver (died under supervision, restart
+                # pending) is NOT dead — keep answering 200 so the
+                # blip stays client-invisible
                 dead = status == "failed"
+                sup = engine._supervisor
                 _write_response(writer, 503 if dead else 200, {
                     "status": "error" if dead else "ok",
                     "driver": status,
@@ -348,6 +378,11 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
                     # multi-step decode horizon (DESIGN.md §6.6): scan
                     # steps fused per decode device call
                     "decode_steps": engine.server.decode_steps,
+                    # per-instance health lifecycle (§6.8): healthy /
+                    # degraded / quarantined / probation
+                    "instance_health": engine.server.health.states(),
+                    "resilience": (sup.snapshot() if sup is not None
+                                   else None),
                 })
             elif path == "/debug/trace" and method == "GET":
                 _write_response(writer, 200,

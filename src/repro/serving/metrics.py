@@ -44,7 +44,12 @@ class InstanceStats:
     admitted: int = 0
     completed: int = 0
     cancelled: int = 0             # client cancel / disconnect / expiry
-    rejected: int = 0              # failed submit-time validation
+    rejected: int = 0              # failed submit-time validation (also
+    #                              # counts quarantine 503s)
+    failed: int = 0                # terminally errored after admission
+    #                              # (device-call failure / NaN guard)
+    shed: int = 0                  # dropped from queue by brownout
+    requeued: int = 0              # crash-recovery re-submissions
     prompt_tokens: int = 0
     generated_tokens: int = 0
     queue_depth: int = 0           # current, updated on submit/admit
@@ -90,6 +95,14 @@ class ServerMetrics:
         # wall time decode-ready slots sat idle while admission chunks
         # ran — what the engine's chunk_budget bounds per step
         self.admission_stall_s = 0.0
+        # resilience (DESIGN.md §6.8): the Supervisor wires a snapshot
+        # callable (restarts/retries/watchdog counters); the health
+        # monitor likewise.  Unwired, snapshots carry zeros/None so the
+        # Prometheus rows are always present
+        self.resilience_fn: Callable[[], dict] | None = None
+        self.health_fn: Callable[[], dict] | None = None
+        self.replayed_tokens = 0     # regenerated with emission suppressed
+        self.replay_mismatches = 0   # replayed token != delivered prefix
         self.started = clock()
         # per-request arrival time of the previous token (ITL deltas);
         # entries live exactly as long as the request decodes
@@ -188,6 +201,38 @@ class ServerMetrics:
         if request_id is not None:
             self._last_token_t.pop(request_id, None)
 
+    def note_failed(self, instance: int,
+                    request_id: int | None = None) -> None:
+        """A request failed terminally after admission (device-call
+        failure or NaN/Inf guard)."""
+        if 0 <= instance < self.m:
+            self.per_instance[instance].failed += 1
+        if request_id is not None:
+            self._last_token_t.pop(request_id, None)
+
+    def note_shed(self, instance: int) -> None:
+        """A queued request was dropped by overload brownout."""
+        st = self.per_instance[instance]
+        st.shed += 1
+        st.queue_depth -= 1
+
+    def note_requeue(self, instance: int) -> None:
+        """A recovered request re-entered its queue after a restart."""
+        st = self.per_instance[instance]
+        st.requeued += 1
+        st.queue_depth += 1
+
+    def note_replay(self, instance: int) -> None:
+        """One already-delivered token regenerated with emission
+        suppressed during recovery replay."""
+        self.replayed_tokens += 1
+
+    def reset_queue_depths(self) -> None:
+        """Crash recovery: queues were drained wholesale, gauges follow
+        (requeues re-increment them)."""
+        for st in self.per_instance:
+            st.queue_depth = 0
+
     # -- reporting -----------------------------------------------------------
 
     def snapshot(self) -> dict:
@@ -207,6 +252,9 @@ class ServerMetrics:
                 "completed": st.completed,
                 "cancelled": st.cancelled,
                 "rejected": st.rejected,
+                "failed": st.failed,
+                "shed": st.shed,
+                "requeued": st.requeued,
                 "queue_depth": st.queue_depth,
                 "queue_peak": st.queue_peak,
                 "prompt_tokens": st.prompt_tokens,
@@ -271,6 +319,23 @@ class ServerMetrics:
             "tok_per_s": gen / dt,
             "cancelled": sum(s.cancelled for s in self.per_instance),
             "rejected": sum(s.rejected for s in self.per_instance),
+            "failed": sum(s.failed for s in self.per_instance),
+            "shed": sum(s.shed for s in self.per_instance),
+            "requeued": sum(s.requeued for s in self.per_instance),
+            "replayed_tokens": self.replayed_tokens,
+            "replay_mismatches": self.replay_mismatches,
+            # supervision counters: zeros when no Supervisor is wired, so
+            # the Prometheus exposition always carries the rows
+            "resilience": (
+                self.resilience_fn() if self.resilience_fn is not None
+                else {"driver_restarts": 0, "request_retries": 0,
+                      "watchdog_timeouts": 0, "tokens_replayed": 0,
+                      "retry_budget_exhausted": 0,
+                      "last_recovery_s": None, "recoveries": []}
+            ),
+            "health": (
+                self.health_fn() if self.health_fn is not None else None
+            ),
             "ttft_ms": percentiles(all_ttft),
             "itl_ms": percentiles(all_itl),
             "instances": inst,

@@ -44,6 +44,18 @@ _ENGINE_FIELDS = (
      "Requests cancelled/expired across all instances"),
     ("rejected", "rejected_total", "counter",
      "Requests rejected at submit-time validation"),
+    ("failed", "failed_total", "counter",
+     "Requests terminally failed by a contained fault (NaN guard, "
+     "prefill/scatter error)"),
+    ("shed", "shed_total", "counter",
+     "Requests shed by overload brownout (queued past the age bound)"),
+    ("requeued", "requeued_total", "counter",
+     "Requests requeued by crash recovery (replayed under the same id)"),
+    ("replayed_tokens", "tokens_replayed_total", "counter",
+     "Tokens regenerated with emission suppressed after a requeue"),
+    ("replay_mismatches", "replay_mismatches_total", "counter",
+     "Replayed tokens that differed from the delivered prefix "
+     "(must stay 0 under greedy decode)"),
     ("tok_per_s", "tokens_per_second", "gauge",
      "Aggregate generation throughput over the metrics window"),
     ("prefill_tok_per_s", "prefill_tokens_per_second", "gauge",
@@ -67,7 +79,27 @@ _INSTANCE_FIELDS = (
     ("prompt_tokens", "instance_prompt_tokens_total", "counter"),
     ("generated_tokens", "instance_generated_tokens_total", "counter"),
     ("tok_per_s", "instance_tokens_per_second", "gauge"),
+    ("failed", "instance_failed_total", "counter"),
+    ("shed", "instance_shed_total", "counter"),
+    ("requeued", "instance_requeued_total", "counter"),
 )
+
+# snapshot["resilience"] block (Supervisor counters; zeros when no
+# Supervisor is wired, so the rows are always present for scrapers)
+_RESILIENCE_FIELDS = (
+    ("driver_restarts", "driver_restarts_total",
+     "Supervised engine-driver restarts (crash or watchdog)"),
+    ("request_retries", "request_retries_total",
+     "Request requeues across driver restarts"),
+    ("watchdog_timeouts", "watchdog_timeouts_total",
+     "Device steps that overran the watchdog deadline"),
+    ("tokens_replayed", "supervisor_tokens_replayed_total",
+     "Delivered-prefix tokens scheduled for suppressed replay"),
+    ("retry_budget_exhausted", "retry_budget_exhausted_total",
+     "Requests terminally failed after exhausting the retry budget"),
+)
+
+HEALTH_STATES = ("healthy", "degraded", "quarantined", "probation")
 
 _QUANTILES = (("p50", "0.5"), ("p95", "0.95"), ("p99", "0.99"))
 
@@ -137,6 +169,31 @@ def render(snapshot: dict, *, extra_labels: dict | None = None) -> str:
                 lines.append(_sample(
                     name, {**base, "instance": i, "quantile": q},
                     d[pkey] if d is not None else None))
+
+    res = snapshot.get("resilience")
+    if res is not None:
+        for key, name, hlp in _RESILIENCE_FIELDS:
+            head(name, "counter", hlp)
+            lines.append(_sample(name, base, res.get(key, 0)))
+        head("last_recovery_seconds", "gauge",
+             "Duration of the most recent driver recovery (NaN if none)")
+        lines.append(_sample("last_recovery_seconds", base,
+                             res.get("last_recovery_s")))
+
+    health = snapshot.get("health")
+    if health is not None:
+        head("instances_quarantined", "gauge",
+             "Instances currently quarantined (their requests 503)")
+        lines.append(_sample("instances_quarantined", base,
+                             health["quarantined_now"]))
+        head("instance_health_state", "gauge",
+             "Per-instance health lifecycle; the active state reads 1")
+        for i, st in enumerate(health["states"]):
+            for state in HEALTH_STATES:
+                lines.append(_sample(
+                    "instance_health_state",
+                    {**base, "instance": i, "state": state},
+                    1 if st == state else 0))
 
     mesh = snapshot.get("mesh")
     if mesh is not None:

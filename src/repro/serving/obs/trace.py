@@ -55,6 +55,10 @@ DEFAULT_CAPACITY = 65536
 # request lifecycle stages, in order; consecutive pairs become spans
 STAGES = ("submit", "admit", "prefill_done", "finish")
 TERMINAL = ("finish", "cancel")
+# resilience stages (DESIGN.md §6.8): each occurrence renders as its
+# own instant (a request can requeue more than once, a driver can
+# restart more than once — these never collapse into lifecycle spans)
+RECOVERY = ("requeue", "restart", "shed", "quarantine")
 
 
 @dataclasses.dataclass
@@ -202,6 +206,18 @@ class Tracer:
                         "pending": ev.pending,
                         "decode_steps": ev.decode_steps,
                     },
+                })
+            elif ev.stage in RECOVERY:
+                # rendered immediately (not via marks): every
+                # occurrence is its own instant, and rid -1 (driver
+                # restarts) is not a request lifecycle
+                events.append({
+                    "name": (f"{ev.stage}:{ev.status}" if ev.status
+                             else ev.stage),
+                    "ph": "i", "cat": "resilience", "pid": 1,
+                    "tid": ev.rid, "ts": us(ev.t), "s": "t",
+                    "args": {"request_id": ev.rid,
+                             "instance": ev.instance},
                 })
             else:
                 marks.setdefault(ev.rid, {})[ev.stage] = ev

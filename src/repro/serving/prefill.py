@@ -342,13 +342,17 @@ class ChunkedPrefill:
         fresh = np.zeros((k,), bool)
         pvalid = np.zeros((k, 1, c), bool)
         tokens_done = 0
+        # lane bookkeeping is STAGED and committed only after the device
+        # call returns: an exception mid-call leaves every lane exactly
+        # as it was (exception-safe step; the engine fails or requeues
+        # the requests, never resumes from half-advanced positions)
+        staged: list[tuple[_Lane, int]] = []
         for i, lane in enumerate(self._lanes):
             if lane.req is None:
                 continue
             inst[i] = lane.req.instance
             offset[i, 0] = lane.next_pos
             fresh[i] = lane.fresh
-            lane.fresh = False
             if i in workable:
                 valid[i] = True
                 # folded final chunks advance only their real remainder;
@@ -359,8 +363,8 @@ class ChunkedPrefill:
                     p = lane.next_pos + j
                     if p >= self.prefix:
                         toks[i, 0, j] = lane.req.prompt[p - self.prefix]
-                lane.next_pos += adv
                 tokens_done += adv
+                staged.append((lane, adv))
         extras = {}
         if fold:
             extras["valid"] = jnp.asarray(pvalid)
@@ -380,6 +384,14 @@ class ChunkedPrefill:
             jnp.asarray(offset), jnp.asarray(valid), jnp.asarray(fresh), extras,
         )
         self.device_calls += 1
+        # the call landed: commit lane advances, and clear ``fresh`` on
+        # every bound lane (the call re-initialized all fresh rows
+        # in-graph, workable or not)
+        for lane, adv in staged:
+            lane.next_pos += adv
+        for lane in self._lanes:
+            if lane.req is not None:
+                lane.fresh = False
         if trace_on:
             t_dispatch = time.perf_counter()
             # settling per chunk is a tracing-ON cost: it buys the true
@@ -394,6 +406,22 @@ class ChunkedPrefill:
             )
         if self.metrics is not None:
             self.metrics.note_prefill_batch(len(workable), tokens_done)
+
+    def reset(self) -> None:
+        """Crash recovery (DESIGN.md §6.8): evict every lane and rebuild
+        the live carry from the pristine zero copy — a failed donated
+        chunk call may have invalidated the carry buffers.  Compiled
+        chunk programs and cumulative counters are kept."""
+        for lane in self._lanes:
+            lane.req = None
+            lane.fresh = False
+        carry = jax.tree.map(jnp.copy, self._zero_carry)
+        if self.mesh is not None:
+            from repro.launch.shardings import tree_shardings
+            carry = jax.device_put(
+                carry, tree_shardings(self.rules, self._carry_axes, carry))
+        self._carry = carry
+        self._tail_turn = False
 
     # -- convenience (tests / non-interleaved callers) -----------------------
 

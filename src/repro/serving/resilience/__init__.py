@@ -1,0 +1,21 @@
+"""Fault-tolerant serving core (DESIGN.md §6.8): deterministic fault
+injection, supervised driver recovery, per-instance health/quarantine,
+and overload brownout."""
+from repro.serving.resilience.faults import (
+    FaultInjected,
+    FaultInjector,
+    FaultSpec,
+)
+from repro.serving.resilience.health import HealthMonitor
+from repro.serving.resilience.policy import BrownoutPolicy
+from repro.serving.resilience.supervisor import Supervisor, WatchdogTimeout
+
+__all__ = [
+    "BrownoutPolicy",
+    "FaultInjected",
+    "FaultInjector",
+    "FaultSpec",
+    "HealthMonitor",
+    "Supervisor",
+    "WatchdogTimeout",
+]

@@ -43,6 +43,15 @@ class Request:
     request_id: int = -1
     submit_time: float = 0.0       # host clock at submit (metrics)
     _seq: int = -1                 # global arrival index (scheduler-owned)
+    # crash recovery (DESIGN.md §6.8): on requeue after a driver crash,
+    # the first ``emit_skip`` regenerated tokens were already delivered
+    # to the client — the engine replays them with emission suppressed
+    # (``replay_expect`` holds the delivered prefix for the mismatch
+    # counter); ``retries`` is the supervisor's per-request restart
+    # count against the retry budget
+    emit_skip: int = 0
+    replay_expect: list[int] | None = None
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -54,8 +63,11 @@ class Result:
     latency_s: float = 0.0
     # terminal state: every request the engine ever accepted (and, via
     # ``try_submit``, every request it rejected) ends in exactly one
-    # Result — the async frontend's stream fan-out keys off this
-    status: str = "ok"             # ok | rejected | cancelled | expired
+    # Result — the async frontend's stream fan-out keys off this.
+    # "error" = device-call/driver failure, "unavailable" = instance
+    # quarantined (HTTP 503), "shed" = dropped by overload brownout
+    status: str = "ok"   # ok | rejected | cancelled | expired | error
+    #                    # | unavailable | shed
     error: str | None = None       # human-readable reason for non-ok
     # why an ok decode stopped: "stop" (EOS) or "length" (max_new_tokens
     # / context cap) — OpenAI vocabulary, surfaced by the HTTP layer
@@ -132,6 +144,30 @@ class Scheduler:
                     q.remove(req)
                     return req
         return None
+
+    def drain_all(self) -> list[Request]:
+        """Pop every queued request (crash recovery: the supervisor
+        requeues them in arrival order).  Policy state is untouched —
+        exact for every policy, same argument as ``cancel``."""
+        out: list[Request] = []
+        for q in self.queues:
+            out.extend(q)
+            q.clear()
+        out.sort(key=lambda r: r._seq)
+        return out
+
+    def shed_older_than(self, cutoff: float) -> list[Request]:
+        """Pop every queued request submitted before ``cutoff`` (overload
+        brownout: shed by age).  Returns them oldest-first."""
+        out: list[Request] = []
+        for q in self.queues:
+            keep = [r for r in q if r.submit_time >= cutoff]
+            if len(keep) != len(q):
+                out.extend(r for r in q if r.submit_time < cutoff)
+                q.clear()
+                q.extend(keep)
+        out.sort(key=lambda r: r._seq)
+        return out
 
     # -- accounting hook (token-budget fairness) ----------------------------
     # The engine reports each generated token; prompt tokens are charged by

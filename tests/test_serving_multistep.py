@@ -180,10 +180,10 @@ def test_midblock_stop_freezes_cache_and_tokens():
     # slot (0, 0) has budget for 2 steps; everyone else rides the full 4
     rem = jnp.full((M, B), 10, jnp.int32).at[0, 0].set(2)
 
-    toks4, em4, cache4, _ = srv._step(
+    toks4, em4, ok4, cache4, _ = srv._step(
         srv.params, srv.cache, tok, pos, key, alive, rem, 4)
     srv2 = mk()
-    toks2, em2, cache2, _ = srv2._step(
+    toks2, em2, ok2, cache2, _ = srv2._step(
         srv2.params, srv2.cache, tok, pos, key, alive, rem, 2)
 
     em4 = np.asarray(em4)
@@ -191,6 +191,8 @@ def test_midblock_stop_freezes_cache_and_tokens():
     # emitted = alive at entry of each scan step: 2 real rows, 2 junk
     assert em4[:, 0, 0].tolist() == [True, True, False, False]
     assert em4[:, 1, 0].all()
+    # a healthy decode never trips the NaN/Inf token guard (§6.8)
+    assert np.asarray(ok4).all() and np.asarray(ok2).all()
     # frozen token after the stop; real rows match the 2-step block
     assert (toks4[:2] == toks2).all()
     assert toks4[2, 0, 0] == toks4[1, 0, 0] == toks4[3, 0, 0]

@@ -523,18 +523,24 @@ def test_healthz_503_when_driver_dies():
         stream = await engine.submit(
             Request(instance=0, prompt=[1, 2], max_new_tokens=2))
         res = await stream.result()
-        assert res.status == "cancelled"
+        # unsupervised driver death is a terminal engine failure, not a
+        # client cancellation: the stream errors with the tokens it
+        # already delivered (none here) — DESIGN.md §6.8
+        assert res.status == "error"
         assert "driver failed" in res.error
+        assert res.tokens == list(stream.emitted)
 
         st, _, body = await _req_http(port, "GET", "/healthz")
         h = json.loads(body)
         assert st == 503
         assert h["status"] == "error" and h["driver"] == "failed"
+        assert h["instance_health"] == ["healthy", "healthy"]
 
         http.close()
         await http.wait_closed()
-        with pytest.raises(RuntimeError):
-            await engine.aclose()
+        # the failure already reached every waiter; aclose() returns
+        # without re-raising and without hanging
+        await asyncio.wait_for(engine.aclose(), 10)
 
     asyncio.run(run())
 
