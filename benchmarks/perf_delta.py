@@ -33,9 +33,15 @@ def load(d: str, mesh: str) -> dict:
 
 def _serve_metric(rec: dict, path: tuple):
     """Walk a key path into a serve record; None when any hop is absent
-    (old records predate the obs section)."""
+    (old records predate the obs section).  Integer hops index lists
+    (the SLO report's per-instance array)."""
     cur = rec
     for k in path:
+        if isinstance(cur, list):
+            if not isinstance(k, int) or not -len(cur) <= k < len(cur):
+                return None
+            cur = cur[k]
+            continue
         if not isinstance(cur, dict) or k not in cur or cur[k] is None:
             return None
         cur = cur[k]
@@ -72,6 +78,23 @@ _SERVE_METRICS = (
     ("mean grid occupancy", ("mean_grid_occupancy",), True),
     ("idle slot token-steps", ("obs", "idle_slot_token_steps"), False),
     ("tracing overhead (%)", ("obs", "tracing_overhead_pct"), False),
+    # tenant accounting + SLO burn (DESIGN.md §6.9) — absent pre-PR-10
+    ("attribution conservation rel err",
+     ("tenant_attribution", "conservation_rel_err"), False),
+    ("attributed settled device-s", ("tenant_attribution", "settled_s"),
+     False),
+    ("idle-slot device-s (all tenants)",
+     ("tenant_attribution", "idle_total_s"), False),
+    ("tenant 0 device-s",
+     ("tenant_attribution", "per_tenant", "0", "device_s"), False),
+    ("tenant 0 queue-wait s",
+     ("tenant_attribution", "per_tenant", "0", "queue_wait_s"), False),
+    ("SLO ttft burn rate (inst 0)",
+     ("load_gen", "slo", "instances", 0, "objectives", "ttft",
+      "burn_rate"), False),
+    ("SLO ttft budget remaining (inst 0)",
+     ("load_gen", "slo", "instances", 0, "objectives", "ttft",
+      "budget_remaining"), True),
 )
 
 

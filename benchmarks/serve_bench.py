@@ -63,6 +63,16 @@ trajectory across PRs.  ``--trace-out trace.json`` dumps the pass's
 Chrome-trace JSON (Perfetto / chrome://tracing); ``--profile-kernels``
 times each serving Pallas kernel at the run's shapes and records
 achieved-vs-roofline figures (``kernel_roofline``).
+
+Tenant accounting + SLOs (``tenant_attribution`` + ``load_gen.slo``
+sections, DESIGN.md §6.9): the traced pass also runs the per-tenant
+device-time ledger — per-tenant decode/prefill/scatter/idle
+device-seconds, head-of-line interference, and the conservation
+invariant (attributed time re-sums to settled wall; rel err < 1% is an
+acceptance check on every record).  The load-gen pass evaluates
+TTFT/ITL error budgets (``--slo-ttft-ms``/``--slo-itl-ms``) over its
+log-bucketed histograms, recording per-instance burn rate, budget
+remaining, and ok/burning/violated state.
 """
 from __future__ import annotations
 
@@ -323,8 +333,12 @@ def _run_load_gen(cfg, merged, mesh, args, reqs) -> dict:
     ``--clients`` concurrent client tasks; consumers are fire-and-forget
     so arrivals never wait on completions."""
     from repro.serving.frontend import AsyncEngine
+    from repro.serving.obs import SLOConfig
 
-    server = _mk_server(cfg, merged, mesh, args)
+    slo = (SLOConfig(ttft_ms=args.slo_ttft_ms or None,
+                     itl_ms=args.slo_itl_ms or None)
+           if (args.slo_ttft_ms > 0 or args.slo_itl_ms > 0) else None)
+    server = _mk_server(cfg, merged, mesh, args, slo=slo)
     # compile warmup outside the timed/streamed pass; fresh metrics after,
     # so the recorded percentiles carry no compile-time TTFT outlier
     server.submit(Request(0, list(reqs[0].prompt), reqs[0].max_new_tokens))
@@ -391,6 +405,9 @@ def _run_load_gen(cfg, merged, mesh, args, reqs) -> dict:
              "generated_tokens": inst["generated_tokens"]}
             for inst in snap["instances"]
         ],
+        # per-instance error-budget view of the run (§6.9); percentiles
+        # above already come from the unbiased log-bucketed histograms
+        "slo": snap.get("slo"),
     }
 
 
@@ -406,10 +423,13 @@ def _run_observed(cfg, merged, mesh, args, reqs) -> tuple[dict, dict]:
     _drain(server, mk())               # compile warmup
     off = _drain(server, mk())
     server.tracer.start()
-    on = _drain(server, mk())
+    server.accounting.start()          # tenant attribution rides the
+    on = _drain(server, mk())          # same settle points (§6.9)
     server.tracer.stop()
+    server.accounting.stop()
     summary = server.tracer.summary()
     chrome = server.tracer.export_chrome()
+    acct = server.accounting.snapshot()
     obs = dict(summary)
     obs.update({
         "tok_per_s_untraced": off["tok_per_s"],
@@ -422,7 +442,19 @@ def _run_observed(cfg, merged, mesh, args, reqs) -> tuple[dict, dict]:
         ) if on["tok_per_s"] > 0 else None,
         "trace_events": len(chrome["traceEvents"]),
     })
-    return obs, chrome
+    # the §6.9 attribution ledger for the traced pass: per-tenant
+    # device-second accounts + the conservation invariant (CI
+    # bench-smoke asserts rel err < 1%)
+    attribution = {
+        "conservation_rel_err": acct["conservation_rel_err"],
+        "settled_s": acct["settled_s"],
+        "attributed_s": acct["attributed_s"],
+        "idle_total_s": acct["idle_total_s"],
+        "device_calls": acct["device_calls"],
+        "per_tenant": acct["per_tenant"],
+        "interference": acct["interference"],
+    }
+    return obs, chrome, attribution
 
 
 def _run_recovery(cfg, merged, mesh, args, reqs) -> dict:
@@ -566,6 +598,33 @@ def validate_record(record: dict) -> None:
                 if inst["generated_tokens"] > inst["completed"]:
                     check_pct(inst["itl_ms"],
                               f"load_gen.per_instance[{i}].itl_ms")
+    # tenant attribution (§6.9): the conservation invariant is part of
+    # the record's validity — attributed per-tenant time must re-sum to
+    # settled device wall within 1% (CI bench-smoke acceptance)
+    ta = record["tenant_attribution"]
+    for f in ("conservation_rel_err", "settled_s", "attributed_s",
+              "idle_total_s"):
+        v = ta[f]
+        assert isinstance(v, (int, float)) and _math.isfinite(v), (
+            f"tenant_attribution: {f} is not finite: {v!r}")
+    assert ta["settled_s"] > 0 and ta["device_calls"] > 0
+    assert ta["conservation_rel_err"] < 0.01, (
+        f"attribution conservation violated: rel err "
+        f"{ta['conservation_rel_err']:.3e} >= 1%")
+    assert ta["per_tenant"], "tenant_attribution: empty ledger"
+    for i, t in ta["per_tenant"].items():
+        assert t["device_s"] >= 0 and _math.isfinite(t["device_s"]), (i, t)
+    assert sum(t["device_s"] for t in ta["per_tenant"].values()) > 0
+    # load-gen SLO section: when configured, every objective must carry
+    # finite budget math and a legal state
+    if lg is not None and (lg.get("slo") or {}).get("configured"):
+        for i, inst in enumerate(lg["slo"]["instances"]):
+            assert inst["state"] in ("ok", "burning", "violated"), (i, inst)
+            for name, o in inst["objectives"].items():
+                for f in ("bad_frac", "burn_rate", "budget_remaining"):
+                    v = o[f]
+                    assert isinstance(v, (int, float)) and _math.isfinite(v), (
+                        f"load_gen.slo[{i}].{name}: {f} not finite: {v!r}")
     # observability section: dispatch overhead + occupancy must be
     # present and finite — a trace regression fails the bench, not just
     # a dashboard (ISSUE 6 acceptance / CI bench-smoke)
@@ -654,6 +713,13 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=50.0,
                     help="open-loop arrival rate in requests/s (exponential "
                          "inter-arrivals, split over --clients)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=1000.0,
+                    help="TTFT objective evaluated over the load-gen pass "
+                         "(record['load_gen']['slo'], DESIGN.md §6.9); "
+                         "0 disables the SLO section")
+    ap.add_argument("--slo-itl-ms", type=float, default=500.0,
+                    help="inter-token-latency objective for the load-gen "
+                         "pass; 0 disables the ITL objective")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host-platform devices and serve sharded")
     ap.add_argument("--mesh-shape", default=None, metavar="DxT",
@@ -783,7 +849,8 @@ def main():
 
     # step-trace observability pass: per-device-call dispatch overhead,
     # grid occupancy, and the tracing on/off throughput A/B
-    obs, chrome = _run_observed(cfg, merged, mesh, args, reqs)
+    obs, chrome, tenant_attribution = _run_observed(cfg, merged, mesh,
+                                                    args, reqs)
     if args.trace_out:
         with open(args.trace_out, "w") as f:
             json.dump(chrome, f)
@@ -830,6 +897,7 @@ def main():
         "kernel_launches_per_decode_step": kernel_launches,
         "load_gen": load_gen,
         "obs": obs,
+        "tenant_attribution": tenant_attribution,
         "recovery": recovery,
         # promoted to top level so perf_delta can diff the dispatch
         # trajectory across PRs without digging into the section

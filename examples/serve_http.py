@@ -22,7 +22,13 @@ smoke TinyLlama config), exposes it over HTTP on an ephemeral port
      deterministic fault plan that crashes the driver mid-decode; a
      Supervisor restarts it, requeues the in-flight request with its
      already-delivered token prefix, and the client's stream comes out
-     bit-identical to the fault-free run — /healthz shows the restart.
+     bit-identical to the fault-free run — /healthz shows the restart,
+  8. post-mortem (DESIGN.md §6.9): the crashed server was running with
+     TTFT/ITL SLOs, per-tenant accounting, and an armed flight
+     recorder — GET /v1/slo reports the error budgets, GET
+     /debug/flight lists the crash dump the supervisor froze at the
+     incident, and the flight-0001.json artifact is recovered from
+     disk and inspected.
 
 Everything is stdlib: asyncio server, asyncio TCP clients, token-id
 prompts (this repro has no tokenizer).
@@ -31,14 +37,16 @@ Run: PYTHONPATH=src python examples/serve_http.py
 """
 import asyncio
 import json
+import tempfile
 
 import jax
 
 from repro import api
 from repro.configs import registry
 from repro.models import common as C
-from repro.serving import (AsyncEngine, FaultInjector, MultiModelServer,
-                           Supervisor, start_http_server)
+from repro.serving import (AsyncEngine, FaultInjector, FlightRecorder,
+                           MultiModelServer, SLOConfig, Supervisor,
+                           start_http_server)
 
 M = 2
 
@@ -205,16 +213,35 @@ async def recover_async(server, inj):
     h = json.loads(rest)
     res = h["resilience"]
     print(f"  /healthz: driver={h['driver']} "
-          f"instance_health={h['instance_health']}")
+          f"instance_health={h['instance_health']} slo={h['slo']}")
     print(f"  restarts={res['driver_restarts']} "
           f"retries={res['request_retries']} "
           f"tokens_replayed={res['tokens_replayed']} "
           f"recovered in {res['last_recovery_s'] * 1e3:.0f} ms")
 
+    # act 8: the post-mortem surface (DESIGN.md §6.9)
+    print("\n== post-mortem: /v1/slo + /debug/flight (DESIGN.md §6.9) ==")
+    head, rest = await http_roundtrip(port, "GET", "/v1/slo")
+    slo = json.loads(rest)
+    cfg = slo["config"]
+    print(f"  SLO target {cfg['target']:.0%}, ttft<={cfg['ttft_ms']:g}ms "
+          f"itl<={cfg['itl_ms']:g}ms")
+    for i, inst in enumerate(slo["instances"]):
+        t = inst["objectives"]["ttft"]
+        print(f"  instance {i}: state={inst['state']} "
+              f"ttft bad={t['bad_frac']:.1%} burn={t['burn_rate']:.2f} "
+              f"budget={t['budget_remaining']:.0%}")
+
+    head, rest = await http_roundtrip(port, "GET", "/debug/flight")
+    fl = json.loads(rest)
+    print(f"  /debug/flight: {fl['count']} dump(s) in {fl['directory']}")
+    dump_path = fl["dumps"][0]["path"]
+
     http.close()
     await http.wait_closed()
     await engine.aclose()
     print("  recovered, drained and closed.")
+    return dump_path
 
 
 def main():
@@ -228,12 +255,28 @@ def main():
     asyncio.run(main_async(server))
     print(server.metrics.format_table())
 
-    # act 7 gets its own engine: a deterministic driver-crash plan
+    # acts 7+8 get their own engine: a deterministic driver-crash plan,
+    # this time with SLOs, accounting and the flight recorder armed so
+    # the crash leaves a post-mortem behind (DESIGN.md §6.9)
     inj = FaultInjector.from_plan(
         {"seed": 0, "faults": [{"site": "driver", "at_call": 3}]})
+    flight_dir = tempfile.mkdtemp(prefix="flight-")
     faulted = MultiModelServer(cfg, merged, slots_per_instance=2,
-                               max_context=64, faults=inj)
-    asyncio.run(recover_async(faulted, inj))
+                               max_context=64, faults=inj,
+                               slo=SLOConfig(ttft_ms=500.0, itl_ms=250.0),
+                               flight=FlightRecorder(flight_dir))
+    faulted.accounting.start()
+    faulted.tracer.start()       # the dump freezes the trace tail too
+    dump_path = asyncio.run(recover_async(faulted, inj))
+
+    # the artifact survives the process: load it back from disk
+    with open(dump_path) as f:
+        rec = json.load(f)
+    print(f"\nflight artifact {dump_path}:")
+    print(f"  schema={rec['schema']} reason={rec['reason']!r} "
+          f"{len(rec['trace_events'])} trace events, queue depths "
+          f"{rec['queue_depths']} at the incident")
+    print(faulted.accounting.format_table())
 
 
 if __name__ == "__main__":

@@ -61,6 +61,29 @@ def _supervise(engine, args):
     return sup
 
 
+def _print_obs(server) -> None:
+    """End-of-run per-tenant attribution + SLO tables (DESIGN.md §6.9);
+    silent when neither accounting nor an SLO config is active."""
+    acct = server.accounting
+    if acct.enabled or acct.settled_s > 0:
+        print(acct.format_table())
+    rep = server.metrics.slo_report()
+    if rep.get("configured"):
+        cfg = rep["config"]
+        lines = [f"SLO (target {cfg['target']:.0%}"
+                 + (f", ttft<={cfg['ttft_ms']:g}ms" if cfg["ttft_ms"] else "")
+                 + (f", itl<={cfg['itl_ms']:g}ms" if cfg["itl_ms"] else "")
+                 + ")"]
+        for i, inst in enumerate(rep["instances"]):
+            objs = "  ".join(
+                f"{name}: {o['bad_frac']:.2%} bad, "
+                f"burn {o['burn_rate']:.2f}, "
+                f"budget {o['budget_remaining']:.0%}"
+                for name, o in inst["objectives"].items())
+            lines.append(f"  inst {i} [{inst['state']:>8}]  {objs}")
+        print("\n".join(lines))
+
+
 def _print_recovery(sup) -> None:
     if sup is None:
         return
@@ -130,6 +153,7 @@ def _serve_http(server, args):
     except KeyboardInterrupt:
         pass
     print(server.metrics.format_table())
+    _print_obs(server)
 
 
 def main():
@@ -197,6 +221,27 @@ def main():
                          "Chrome-trace JSON (Perfetto / chrome://tracing); "
                          "with --http, toggle capture via POST "
                          "/debug/trace/start|stop instead")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="per-instance TTFT objective in ms (DESIGN.md "
+                         "§6.9); 0 = no TTFT SLO. Error-budget burn is "
+                         "reported per instance at end of run and on "
+                         "GET /v1/slo")
+    ap.add_argument("--slo-itl-ms", type=float, default=0.0,
+                    help="per-instance inter-token-latency objective in "
+                         "ms; 0 = no ITL SLO")
+    ap.add_argument("--slo-target", type=float, default=0.99,
+                    help="fraction of tokens that must meet each latency "
+                         "objective (the SLO target, default 0.99)")
+    ap.add_argument("--account", action="store_true",
+                    help="per-tenant device-time attribution (DESIGN.md "
+                         "§6.9): split every settled device call's wall "
+                         "time across the instances occupying the grid; "
+                         "prints the attribution table at end of run")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="arm the flight recorder: on driver crash, "
+                         "watchdog fire, or quarantine, dump last-N trace "
+                         "events + metrics + scheduler depths + SLO state "
+                         "to DIR/flight-NNNN.json")
     args = ap.parse_args()
 
     base = registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
@@ -236,6 +281,17 @@ def main():
         faults = FaultInjector.from_json(args.fault_plan)
         print(f"fault plan: {len(faults.plan)} spec(s), seed {faults.seed}")
 
+    slo = None
+    if args.slo_ttft_ms > 0 or args.slo_itl_ms > 0:
+        from repro.serving import SLOConfig
+        slo = SLOConfig(
+            ttft_ms=args.slo_ttft_ms or None, itl_ms=args.slo_itl_ms or None,
+            target=args.slo_target)
+    flight = None
+    if args.flight_dir:
+        from repro.serving import FlightRecorder
+        flight = FlightRecorder(args.flight_dir)
+
     server = MultiModelServer(
         cfg, merged, slots_per_instance=args.slots, max_context=max_context,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
@@ -243,7 +299,10 @@ def main():
         prefill_lanes=args.lanes, chunk_budget=args.chunk_budget,
         tail_fold=not args.no_tail_fold, mesh=mesh,
         decode_steps=args.decode_steps, faults=faults,
+        slo=slo, flight=flight,
     )
+    if args.account:
+        server.accounting.start()
     if faults is not None:
         faults.arm()
     if args.http:
@@ -298,6 +357,7 @@ def main():
           f"{server.prefill.admitted} admissions, "
           f"{1e3 * server.metrics.admission_stall_s:.1f} ms admission stall")
     print(server.metrics.format_table())
+    _print_obs(server)
     for r in results[:4]:
         print(f"  req {r.request_id} (instance {r.instance}): {r.tokens[:8]}...")
 

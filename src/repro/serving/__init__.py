@@ -7,7 +7,14 @@ from repro.serving.frontend import (
     start_http_server,
 )
 from repro.serving.metrics import ServerMetrics
-from repro.serving.obs import Tracer, render_prometheus
+from repro.serving.obs import (
+    FlightRecorder,
+    LogHistogram,
+    SLOConfig,
+    TenantAccounting,
+    Tracer,
+    render_prometheus,
+)
 from repro.serving.prefill import ChunkedPrefill, PrefillOut
 from repro.serving.resilience import (
     BrownoutPolicy,

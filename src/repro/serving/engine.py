@@ -80,6 +80,8 @@ from repro import api
 from repro.launch.compat import mesh_context
 from repro.models import common as C
 from repro.serving.metrics import ServerMetrics
+from repro.serving.obs.accounting import TenantAccounting
+from repro.serving.obs.flight import FlightRecorder
 from repro.serving.obs.trace import Tracer
 from repro.serving.prefill import ChunkedPrefill
 from repro.serving.resilience.faults import FaultInjector
@@ -118,6 +120,9 @@ class MultiModelServer:
         faults: FaultInjector | None = None,
         health: HealthMonitor | None = None,
         policy=None,
+        accounting=None,
+        flight=None,
+        slo=None,
     ):
         assert cfg.family in SERVABLE_FAMILIES, cfg.family
         if cfg.family == "hybrid":
@@ -141,11 +146,22 @@ class MultiModelServer:
             make_scheduler(scheduler, self.m, mesh=mesh, rules=self.rules)
             if isinstance(scheduler, str) else scheduler
         )
-        self.metrics = ServerMetrics(self.m, mesh=mesh)
+        # per-instance SLO objectives (§6.9) ride the metrics layer:
+        # evaluation is lazy (snapshot-time only), so a configured SLO
+        # costs nothing per token
+        self.slo = slo
+        self.metrics = ServerMetrics(self.m, mesh=mesh, slo=slo)
         # step tracer (DESIGN.md §6.5): always attached, OFF by default —
         # every hot-path call site guards on ``tracer.enabled``, so the
         # disabled path reads one attribute and constructs nothing
         self.tracer = tracer if tracer is not None else Tracer()
+        # per-tenant attribution (§6.9): same discipline — always
+        # attached, OFF until .start(), every site guards on .enabled
+        self.accounting = (accounting if accounting is not None
+                           else TenantAccounting(self.m))
+        self.accounting.m = self.m
+        # crash flight recorder (§6.9): enabled iff a directory is set
+        self.flight = flight if flight is not None else FlightRecorder()
         # fault injection (DESIGN.md §6.8): same discipline as the tracer
         # — always attached, disarmed by default, and every call site
         # guards on ``faults.armed`` so the disarmed path runs zero
@@ -163,6 +179,7 @@ class MultiModelServer:
             lanes=prefill_lanes, metrics=self.metrics,
             mesh=mesh, rules=self.rules,
             tail_fold=tail_fold, donate=donate, tracer=self.tracer,
+            accounting=self.accounting,
         )
         self.metrics.compiled_shapes_fn = \
             lambda: self.prefill.compiled_shapes
@@ -213,6 +230,15 @@ class MultiModelServer:
         if mesh is not None:
             self._key = jax.device_put(self._key, self._rep_shard)
         self.metrics.health_fn = self.health.snapshot
+        self.metrics.accounting_fn = self.accounting.snapshot
+        # interference attribution: the accounting layer asks the
+        # scheduler who is waiting at each settled device call
+        self.accounting.queued_fn = self.scheduler.queued_instances
+        # flight recorder on fresh quarantine transitions (§6.9); the
+        # supervisor hooks crash/watchdog/give-up itself
+        if self.flight.enabled:
+            self.health.on_quarantine = lambda i: self.flight.dump(
+                f"quarantine: instance {i}", server=self)
 
         self._sample = make_grid_sampler(temperature, top_k)
         # temperature<=0 sampling is key-independent argmax, so the
@@ -498,6 +524,10 @@ class MultiModelServer:
             self.active[m][b] = req
             self.prefill.start(req)
             self.metrics.note_admit(m, len(req.prompt))
+            if self.accounting.enabled and req.submit_time > 0:
+                wait = time.perf_counter() - req.submit_time
+                if wait >= 0:
+                    self.accounting.note_queue_wait(m, wait)
             if self.tracer.enabled:
                 self.tracer.request_event(req.request_id, "admit",
                                           instance=m)
@@ -559,11 +589,16 @@ class MultiModelServer:
         flip them to decoding.  Returns terminal Results for requests
         whose scatter failed (their slots are freed, not leaked)."""
         tr = self.tracer
+        acct = self.accounting
         failures: list[Result] = []
         for req, out in completed:
             m, b = self._reserved[req.request_id]
             trace_on = tr.enabled
-            if trace_on:
+            # accounting shares the tracer's settle (timing-only: the
+            # scatter's result is consumed by this step's decode anyway,
+            # so numerics — and greedy streams — are untouched)
+            obs_on = trace_on or acct.enabled
+            if obs_on:
                 t0 = time.perf_counter()
             try:
                 if self.faults.armed:
@@ -582,18 +617,25 @@ class MultiModelServer:
                 continue
             self._reserved.pop(req.request_id)
             self.metrics.note_scatter()
-            if trace_on:
+            if obs_on:
                 t1 = time.perf_counter()
-                # settle so the event's device time is real execution,
-                # not dispatch (tracing-on only; the scatter's result is
-                # consumed by this step's decode anyway)
+                # settle so the recorded device time is real execution,
+                # not dispatch
                 jax.block_until_ready(self.cache)
-                tr.device_call(
-                    "scatter", t0, t1, time.perf_counter(),
-                    step=self.steps, capacity=self.m * self.b,
-                    active=int((self.slot_busy & ~self.slot_prefilling).sum()),
-                )
-                tr.request_event(req.request_id, "prefill_done", instance=m)
+                t_settled = time.perf_counter()
+                if trace_on:
+                    tr.device_call(
+                        "scatter", t0, t1, t_settled,
+                        step=self.steps, capacity=self.m * self.b,
+                        active=int((self.slot_busy
+                                    & ~self.slot_prefilling).sum()),
+                    )
+                    tr.request_event(req.request_id, "prefill_done",
+                                     instance=m)
+                if acct.enabled:
+                    # a scatter admits exactly one request: whole wall
+                    # to its tenant
+                    acct.note_scatter(t_settled - t0, m)
             self.pos[m, b] = out.pos
             self.cur_tok[m, b] = out.last_token
             self.slot_prefilling[m, b] = False
@@ -734,6 +776,17 @@ class MultiModelServer:
                 pending=self.scheduler.total_pending(),
                 decode_steps=k,
             )
+        acct = self.accounting
+        acct_on = acct.enabled
+        if acct_on:
+            # split this call's settled wall across the tenants occupying
+            # the grid, slot-weighted; empty slots bill to idle (§6.9)
+            acct.note_decode(
+                t_settled - t0,
+                [int(c) for c in decoding.sum(axis=1)],
+                self.m * self.b,
+            )
+            replay_counts: dict[int, int] = {}
 
         # host unroll of the (k, M, B) block: every per-token hook
         # (metrics, scheduler accounting, on_token streaming, finish
@@ -774,6 +827,8 @@ class MultiModelServer:
                         if exp is not None and exp[len(gen)] != t:
                             self.metrics.replay_mismatches += 1
                         self.metrics.note_replay(m)
+                        if acct_on:
+                            replay_counts[m] = replay_counts.get(m, 0) + 1
                     else:
                         self.metrics.note_token(
                             m, first=not gen and not req.emit_skip,
@@ -808,6 +863,10 @@ class MultiModelServer:
                         self.slot_busy[m, b] = False
                         self.active[m][b] = None
                         del self.generated[req.request_id]
+        if acct_on and replay_counts:
+            # replay view (§6.8/§6.9): token-weighted share of this
+            # call's wall spent regenerating already-delivered tokens
+            acct.note_replay(replay_counts, t_settled - t0, block_tokens)
         self.health.note_step()
         out.extend(done)
         return out
@@ -910,11 +969,12 @@ class MultiModelServer:
         so recorded percentiles carry no warmup outliers); re-points
         every subsystem holding the metrics object."""
         old = self.metrics
-        self.metrics = ServerMetrics(self.m, mesh=self.mesh)
+        self.metrics = ServerMetrics(self.m, mesh=self.mesh, slo=old.slo)
         self.metrics.compiled_shapes_fn = \
             lambda: self.prefill.compiled_shapes
         self.metrics.health_fn = self.health.snapshot
         self.metrics.resilience_fn = old.resilience_fn
+        self.metrics.accounting_fn = self.accounting.snapshot
         self.prefill.metrics = self.metrics
         return self.metrics
 

@@ -365,6 +365,23 @@ class AsyncEngine:
                 return {"tracing": False, "summary": summary}
         return await self.run_in_step_gap(fn)
 
+    async def set_accounting(self, on: bool) -> dict:
+        """Toggle per-tenant attribution (§6.9) on the live engine —
+        applied between steps so no device call is half-attributed
+        (which would break the conservation invariant).  Stopping
+        returns the final ledger snapshot."""
+        acct = self.server.accounting
+        if on:
+            def fn():
+                acct.start()
+                return {"accounting": True}
+        else:
+            def fn():
+                snap = acct.snapshot()
+                acct.stop()
+                return {"accounting": False, "snapshot": snap}
+        return await self.run_in_step_gap(fn)
+
     async def cancel(self, request_id: int, *, status: str = "cancelled") -> bool:
         """Abort a live request (queued / prefilling / decoding); its
         stream ends with the partial tokens and the given terminal

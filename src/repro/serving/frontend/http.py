@@ -337,14 +337,23 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
                     await _completions(engine, model_map, payload,
                                        reader, writer)
             elif path == "/v1/models" and method == "GET":
+                # per-instance SLO state (ok/burning/violated) rides the
+                # model rows when objectives are configured (§6.9)
+                slo_states = engine.server.metrics.slo_states()
                 _write_response(writer, 200, {
                     "object": "list",
                     "data": [
-                        {"id": name, "object": "model", "instance": idx}
+                        {"id": name, "object": "model", "instance": idx,
+                         "health": engine.server.health.state(idx),
+                         "slo": (slo_states[idx] if slo_states is not None
+                                 else None)}
                         for name, idx in sorted(model_map.items(),
                                                 key=lambda kv: kv[1])
                     ],
                 })
+            elif path == "/v1/slo" and method == "GET":
+                _write_response(writer, 200,
+                                engine.server.metrics.slo_report())
             elif path == "/metrics" and method == "GET":
                 snap = engine.server.metrics.snapshot()
                 accept = _headers.get("accept", "")
@@ -381,6 +390,9 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
                     # per-instance health lifecycle (§6.8): healthy /
                     # degraded / quarantined / probation
                     "instance_health": engine.server.health.states(),
+                    # per-instance SLO state next to health (§6.9);
+                    # None when no objectives are configured
+                    "slo": engine.server.metrics.slo_states(),
                     "resilience": (sup.snapshot() if sup is not None
                                    else None),
                 })
@@ -393,9 +405,18 @@ async def _handle(engine: AsyncEngine, model_map, reader, writer) -> None:
             elif path == "/debug/trace/stop" and method == "POST":
                 _write_response(writer, 200,
                                 await engine.set_tracing(False))
-            elif path in ("/v1/completions", "/v1/models", "/metrics",
-                          "/metrics/reset", "/healthz", "/debug/trace",
-                          "/debug/trace/start", "/debug/trace/stop"):
+            elif path == "/debug/flight" and method == "GET":
+                flight = engine.server.flight
+                _write_response(writer, 200, {
+                    "enabled": flight.enabled,
+                    "directory": flight.directory,
+                    "count": len(flight),
+                    "dumps": flight.latest(),
+                })
+            elif path in ("/v1/completions", "/v1/models", "/v1/slo",
+                          "/metrics", "/metrics/reset", "/healthz",
+                          "/debug/trace", "/debug/trace/start",
+                          "/debug/trace/stop", "/debug/flight"):
                 _error(writer, 405, f"method {method} not allowed on {path}")
             else:
                 _error(writer, 404, f"no route for {method} {path}")

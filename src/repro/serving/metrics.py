@@ -5,11 +5,16 @@ program; operators need to see each task's share.  ``ServerMetrics``
 keeps cheap host-side counters per instance — throughput, latency,
 time-to-first-token, inter-token latency, queue depth — plus engine-wide
 counters (fused decode steps, prefill batches/compiles).  TTFT and ITL
-are also kept as bounded per-instance sample windows so ``snapshot()``
-carries p50/p95/p99 tail latencies (the figures an async frontend's SLO
-lives on), not just means.  ``snapshot()`` returns plain dicts
-(JSON-able, used by benchmarks/serve_bench.py); ``format_table()``
-renders the per-instance report printed by ``repro.launch.serve``.
+percentiles come from always-on log-bucketed histograms
+(``obs/slo.py``): unlike the old bounded sample windows — which evict
+the oldest samples and so report the tail of the last few minutes, not
+of the run — histogram p50/p95/p99 are unbiased over the whole window
+at O(buckets) memory, and export as real Prometheus ``histogram``
+families.  The bounded deques remain as a last-N DEBUG view
+(``ttft_recent_ms``) and as the sliding window the SLO burn-rate math
+wants (§6.9).  ``snapshot()`` returns plain dicts (JSON-able, used by
+benchmarks/serve_bench.py); ``format_table()`` renders the
+per-instance report printed by ``repro.launch.serve``.
 """
 from __future__ import annotations
 
@@ -19,8 +24,16 @@ import time
 from collections import deque
 from typing import Callable
 
-# per-instance latency sample window: enough to make p99 meaningful at
-# serving scale, small enough that snapshots stay O(ms) host work
+from repro.serving.obs.slo import (
+    LogHistogram,
+    SLOConfig,
+    evaluate_availability,
+    evaluate_objective,
+    worst_state,
+)
+
+# per-instance last-N latency window: the recent/debug view and the SLO
+# burn-rate window — percentiles come from the histograms
 MAX_LATENCY_SAMPLES = 4096
 
 
@@ -62,13 +75,20 @@ class InstanceStats:
         default_factory=lambda: deque(maxlen=MAX_LATENCY_SAMPLES))
     itl_samples: deque = dataclasses.field(
         default_factory=lambda: deque(maxlen=MAX_LATENCY_SAMPLES))
+    # unbounded-run percentiles + Prometheus histogram exposition
+    ttft_hist: LogHistogram = dataclasses.field(default_factory=LogHistogram)
+    itl_hist: LogHistogram = dataclasses.field(default_factory=LogHistogram)
 
 
 class ServerMetrics:
     def __init__(self, num_instances: int,
-                 clock: Callable[[], float] = time.perf_counter, mesh=None):
+                 clock: Callable[[], float] = time.perf_counter, mesh=None,
+                 slo: SLOConfig | None = None):
         self.m = num_instances
         self.clock = clock
+        # per-instance SLO objectives (§6.9); None = not configured
+        # (snapshot carries no "slo" block, /v1/slo reports unconfigured)
+        self.slo = slo
         self.per_instance = [InstanceStats() for _ in range(num_instances)]
         self.decode_steps = 0        # fused (M, B)-grid decode+sample steps
         self.decode_calls = 0        # fused decode device calls (blocks of
@@ -101,6 +121,10 @@ class ServerMetrics:
         # Prometheus rows are always present
         self.resilience_fn: Callable[[], dict] | None = None
         self.health_fn: Callable[[], dict] | None = None
+        # per-tenant attribution (§6.9): the engine wires
+        # TenantAccounting.snapshot; unwired or disabled, snapshots
+        # carry no "accounting" block
+        self.accounting_fn: Callable[[], dict] | None = None
         self.replayed_tokens = 0     # regenerated with emission suppressed
         self.replay_mismatches = 0   # replayed token != delivered prefix
         self.started = clock()
@@ -170,11 +194,15 @@ class ServerMetrics:
         now = self.clock()
         with self._lock:
             if first:
-                st.ttft_sum += now - submit_time
+                ttft = now - submit_time
+                st.ttft_sum += ttft
                 st.ttft_n += 1
-                st.ttft_samples.append(now - submit_time)
+                st.ttft_samples.append(ttft)
+                st.ttft_hist.record(ttft)
             elif request_id is not None and request_id in self._last_token_t:
-                st.itl_samples.append(now - self._last_token_t[request_id])
+                itl = now - self._last_token_t[request_id]
+                st.itl_samples.append(itl)
+                st.itl_hist.record(itl)
             if request_id is not None:
                 self._last_token_t[request_id] = now
 
@@ -235,17 +263,65 @@ class ServerMetrics:
 
     # -- reporting -----------------------------------------------------------
 
+    def slo_report(self) -> dict:
+        """Per-instance SLO evaluation (the ``/v1/slo`` payload and the
+        snapshot's ``"slo"`` block).  Lazy by construction: nothing is
+        computed until someone asks, so configuring SLOs adds ZERO
+        hot-path work — the inputs (histograms, recent windows,
+        completion counters) are recorded regardless."""
+        if self.slo is None:
+            return {"configured": False}
+        cfg = self.slo
+        instances = []
+        for st in self.per_instance:
+            with self._lock:
+                ttft_hist = st.ttft_hist
+                itl_hist = st.itl_hist
+                recent_ttft = list(st.ttft_samples)
+                recent_itl = list(st.itl_samples)
+                objectives = {}
+                if cfg.ttft_ms is not None:
+                    objectives["ttft"] = evaluate_objective(
+                        ttft_hist, recent_ttft, cfg.ttft_ms, cfg.target)
+                if cfg.itl_ms is not None:
+                    objectives["itl"] = evaluate_objective(
+                        itl_hist, recent_itl, cfg.itl_ms, cfg.target)
+            objectives["availability"] = evaluate_availability(
+                st.completed, st.failed, cfg.availability_target)
+            instances.append({
+                "objectives": objectives,
+                "state": worst_state(o["state"] for o in objectives.values()),
+            })
+        return {
+            "configured": True,
+            "config": {"ttft_ms": cfg.ttft_ms, "itl_ms": cfg.itl_ms,
+                       "target": cfg.target,
+                       "availability_target": cfg.availability_target},
+            "instances": instances,
+        }
+
+    def slo_states(self) -> list | None:
+        """Per-instance worst-objective state, or None when no SLOs are
+        configured (the /healthz and /v1/models summary)."""
+        if self.slo is None:
+            return None
+        return [i["state"] for i in self.slo_report()["instances"]]
+
     def snapshot(self) -> dict:
         dt = max(self.clock() - self.started, 1e-9)
         inst = []
-        all_ttft: list[float] = []
-        all_itl: list[float] = []
+        agg_ttft = LogHistogram()
+        agg_itl = LogHistogram()
         for st in self.per_instance:
             with self._lock:
                 ttft_samples = list(st.ttft_samples)
                 itl_samples = list(st.itl_samples)
-            all_ttft.extend(ttft_samples)
-            all_itl.extend(itl_samples)
+                ttft_pct = st.ttft_hist.percentiles()
+                itl_pct = st.itl_hist.percentiles()
+                ttft_hist = st.ttft_hist.snapshot()
+                itl_hist = st.itl_hist.snapshot()
+                agg_ttft.merge(st.ttft_hist)
+                agg_itl.merge(st.itl_hist)
             inst.append({
                 "submitted": st.submitted,
                 "admitted": st.admitted,
@@ -262,8 +338,16 @@ class ServerMetrics:
                 "tok_per_s": st.generated_tokens / dt,
                 "mean_ttft_s": st.ttft_sum / st.ttft_n if st.ttft_n else None,
                 "mean_latency_s": st.latency_sum / st.latency_n if st.latency_n else None,
-                "ttft_ms": percentiles(ttft_samples),
-                "itl_ms": percentiles(itl_samples),
+                # unbiased whole-run percentiles (log-bucketed histogram)
+                "ttft_ms": ttft_pct,
+                "itl_ms": itl_pct,
+                # Prometheus histogram exposition source
+                "ttft_hist": ttft_hist,
+                "itl_hist": itl_hist,
+                # last-N debug view (the OLD windowed estimator, kept for
+                # "what happened just now" — biased on long runs by design)
+                "ttft_recent_ms": percentiles(ttft_samples),
+                "itl_recent_ms": percentiles(itl_samples),
             })
         gen = sum(s.generated_tokens for s in self.per_instance)
         # split throughput over each phase's own settled device wall:
@@ -336,10 +420,18 @@ class ServerMetrics:
             "health": (
                 self.health_fn() if self.health_fn is not None else None
             ),
-            "ttft_ms": percentiles(all_ttft),
-            "itl_ms": percentiles(all_itl),
+            "ttft_ms": agg_ttft.percentiles(),
+            "itl_ms": agg_itl.percentiles(),
             "instances": inst,
         }
+        if self.slo is not None:
+            out["slo"] = self.slo_report()
+        if self.accounting_fn is not None:
+            acct = self.accounting_fn()
+            # carried once there is (or was) a capture window — an
+            # engine whose accounting never started adds no block
+            if acct.get("enabled") or acct.get("settled_s", 0.0) > 0:
+                out["accounting"] = acct
         if self.mesh_shape is not None:
             out["mesh"] = {
                 "shape": self.mesh_shape, "devices": self.num_devices,

@@ -9,7 +9,18 @@
                      ``GET /metrics``).
 ``kernel_profile`` — achieved-vs-roofline timing of the serving Pallas
                      kernels at serving shapes.
+``slo``            — log-bucketed latency histograms (unbiased tail
+                     percentiles) + per-instance TTFT/ITL/availability
+                     objectives with error-budget burn rate (§6.9).
+``accounting``     — per-tenant device-time attribution with a
+                     conservation invariant, plus head-of-line
+                     interference reporting (§6.9).
+``flight``         — flight recorder: crash/watchdog/quarantine dumps
+                     of the last-N trace events + metrics + queue
+                     depths + SLO state to JSON artifacts (§6.9).
 """
+from repro.serving.obs.accounting import TenantAccounting
+from repro.serving.obs.flight import FlightRecorder
 from repro.serving.obs.kernel_profile import (
     KERNELS,
     format_table,
@@ -19,17 +30,31 @@ from repro.serving.obs.kernel_profile import (
     validate_profile,
 )
 from repro.serving.obs.prometheus import render as render_prometheus
+from repro.serving.obs.slo import (
+    LogHistogram,
+    SLOConfig,
+    evaluate_availability,
+    evaluate_objective,
+    worst_state,
+)
 from repro.serving.obs.trace import DeviceCallEvent, RequestEvent, Tracer
 
 __all__ = [
     "DeviceCallEvent",
+    "FlightRecorder",
     "KERNELS",
+    "LogHistogram",
     "RequestEvent",
+    "SLOConfig",
+    "TenantAccounting",
     "Tracer",
+    "evaluate_availability",
+    "evaluate_objective",
     "format_table",
     "profile_kernel",
     "profile_serving_kernels",
     "render_prometheus",
     "serving_shapes",
     "validate_profile",
+    "worst_state",
 ]

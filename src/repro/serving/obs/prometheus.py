@@ -100,6 +100,7 @@ _RESILIENCE_FIELDS = (
 )
 
 HEALTH_STATES = ("healthy", "degraded", "quarantined", "probation")
+SLO_STATES = ("ok", "burning", "violated")
 
 _QUANTILES = (("p50", "0.5"), ("p95", "0.95"), ("p99", "0.99"))
 
@@ -169,6 +170,79 @@ def render(snapshot: dict, *, extra_labels: dict | None = None) -> str:
                 lines.append(_sample(
                     name, {**base, "instance": i, "quantile": q},
                     d[pkey] if d is not None else None))
+
+    for block, name in (("ttft_hist", "instance_ttft_seconds"),
+                        ("itl_hist", "instance_itl_seconds")):
+        if not any(st.get(block) for st in insts):
+            continue
+        head(name, "histogram",
+             f"Per-instance {block.split('_')[0]} log-bucketed histogram")
+        for i, st in enumerate(insts):
+            h = st.get(block)
+            if h is None:
+                continue
+            for le, cum in h["buckets"]:
+                lines.append(_sample(
+                    f"{name}_bucket",
+                    {**base, "instance": i,
+                     "le": "+Inf" if math.isinf(le) else _num(le)},
+                    cum))
+            lines.append(_sample(f"{name}_sum", {**base, "instance": i},
+                                 h["sum"]))
+            lines.append(_sample(f"{name}_count", {**base, "instance": i},
+                                 h["count"]))
+
+    slo = snapshot.get("slo")
+    if slo is not None and slo.get("configured"):
+        head("slo_burn_rate", "gauge",
+             "Recent bad fraction over the allowed SLO error budget "
+             "(>1 means the budget is burning)")
+        for i, inst in enumerate(slo["instances"]):
+            for obj, rep in inst["objectives"].items():
+                lines.append(_sample(
+                    "slo_burn_rate", {**base, "instance": i, "objective": obj},
+                    rep["burn_rate"]))
+        head("slo_budget_remaining", "gauge",
+             "Fraction of the cumulative SLO error budget still unspent")
+        for i, inst in enumerate(slo["instances"]):
+            for obj, rep in inst["objectives"].items():
+                lines.append(_sample(
+                    "slo_budget_remaining",
+                    {**base, "instance": i, "objective": obj},
+                    rep["budget_remaining"]))
+        head("slo_state", "gauge",
+             "Per-instance worst objective state; the active state reads 1")
+        for i, inst in enumerate(slo["instances"]):
+            for state in SLO_STATES:
+                lines.append(_sample(
+                    "slo_state", {**base, "instance": i, "state": state},
+                    1 if inst["state"] == state else 0))
+
+    acct = snapshot.get("accounting")
+    if acct is not None:
+        head("tenant_device_seconds_total", "counter",
+             "Settled device wall seconds attributed to each tenant, "
+             "split by account (decode/prefill/scatter/idle)")
+        for i, per in sorted(acct["per_tenant"].items(),
+                             key=lambda kv: int(kv[0])):
+            for account in ("decode_s", "prefill_s", "scatter_s", "idle_s"):
+                lines.append(_sample(
+                    "tenant_device_seconds_total",
+                    {**base, "instance": i,
+                     "account": account.removesuffix("_s")},
+                    per[account]))
+        head("tenant_queue_wait_seconds_total", "counter",
+             "Queue wait accumulated by each tenant's admitted requests")
+        for i, per in sorted(acct["per_tenant"].items(),
+                             key=lambda kv: int(kv[0])):
+            lines.append(_sample(
+                "tenant_queue_wait_seconds_total", {**base, "instance": i},
+                per["queue_wait_s"]))
+        head("attribution_conservation_rel_err", "gauge",
+             "Relative error |attributed - settled| / settled "
+             "(the conservation invariant; must stay < 0.01)")
+        lines.append(_sample("attribution_conservation_rel_err", base,
+                             acct["conservation_rel_err"]))
 
     res = snapshot.get("resilience")
     if res is not None:

@@ -48,8 +48,6 @@ import threading
 import time
 from collections import deque
 
-from repro.serving.metrics import percentiles
-
 DEFAULT_CAPACITY = 65536
 
 # request lifecycle stages, in order; consecutive pairs become spans
@@ -262,6 +260,10 @@ class Tracer:
     def summary(self) -> dict:
         """Aggregate the capture: the figures BENCH_serve.json records
         and ``perf_delta --serve`` diffs across PRs."""
+        # local import: metrics.py imports obs.slo at module scope, so a
+        # module-level import here would close an import cycle through
+        # the obs package __init__
+        from repro.serving.metrics import percentiles
         calls = [e for e in self._snapshot()
                  if isinstance(e, DeviceCallEvent)]
         decodes = [e for e in calls if e.kind == "decode"]

@@ -97,6 +97,7 @@ class ChunkedPrefill:
         tail_fold: bool = True,
         donate: bool | None = None,
         tracer=None,
+        accounting=None,
     ):
         if cfg.family not in SERVABLE:
             raise ValueError(f"family {cfg.family!r} is not servable")
@@ -107,6 +108,8 @@ class ChunkedPrefill:
         # step tracer (engine-owned; None for standalone use) — call
         # sites guard on ``tracer.enabled`` so the off path is free
         self.tracer = tracer
+        # per-tenant attribution (§6.9), same off-is-free discipline
+        self.accounting = accounting
         self.lanes = max(1, lanes)
         # tail folding: pad the final chunk to the full chunk width with
         # per-position validity masks instead of issuing up to chunk-1
@@ -377,7 +380,10 @@ class ChunkedPrefill:
             extras["moe_limit"] = jnp.asarray(limit)
         tr = self.tracer
         trace_on = tr is not None and tr.enabled
-        if trace_on:
+        acct = self.accounting
+        acct_on = acct is not None and acct.enabled
+        obs_on = trace_on or acct_on
+        if obs_on:
             t0 = time.perf_counter()
         self._carry = self._fn(c)(
             params, jnp.asarray(inst), jnp.asarray(toks), self._carry,
@@ -392,18 +398,26 @@ class ChunkedPrefill:
         for lane in self._lanes:
             if lane.req is not None:
                 lane.fresh = False
-        if trace_on:
+        if obs_on:
             t_dispatch = time.perf_counter()
-            # settling per chunk is a tracing-ON cost: it buys the true
-            # per-call device time in the trace; the untraced path keeps
+            # settling per chunk is a tracing/accounting-ON cost: it buys
+            # the true per-call device time; the unobserved path keeps
             # its async dispatch (one settle per advance)
             jax.block_until_ready(self._carry)
-            tr.device_call(
-                "prefill_chunk", t0, t_dispatch, time.perf_counter(),
-                step=step, lanes_busy=self.in_flight(), lanes=self.lanes,
-                valid_frac=tokens_done / (len(workable) * c) if workable else 1.0,
-                tokens=tokens_done,
-            )
+            t_settled = time.perf_counter()
+            if trace_on:
+                tr.device_call(
+                    "prefill_chunk", t0, t_dispatch, t_settled,
+                    step=step, lanes_busy=self.in_flight(), lanes=self.lanes,
+                    valid_frac=tokens_done / (len(workable) * c) if workable else 1.0,
+                    tokens=tokens_done,
+                )
+            if acct_on:
+                # lane-weighted attribution: each busy lane charges its
+                # tenant wall/lanes; unoccupied lanes are shared idle
+                acct.note_prefill(
+                    t_settled - t0,
+                    [int(inst[i]) for i in workable], self.lanes)
         if self.metrics is not None:
             self.metrics.note_prefill_batch(len(workable), tokens_done)
 

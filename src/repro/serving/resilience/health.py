@@ -49,6 +49,10 @@ class HealthMonitor:
         self.max_quarantine_steps = max_quarantine_steps
         self._inst = [_InstanceHealth() for _ in range(num_instances)]
         self.quarantine_events = 0
+        # incident hook: called with the instance index on every FRESH
+        # quarantine transition (not on extensions of an existing one).
+        # The engine wires the flight recorder here (§6.9); None = no-op
+        self.on_quarantine = None
 
     # -- queries ------------------------------------------------------
     def state(self, i: int) -> str:
@@ -70,7 +74,7 @@ class HealthMonitor:
         """Instance ``i`` produced non-finite logits: quarantine now."""
         st = self._inst[i]
         st.poisoned += 1
-        self._quarantine(st)
+        self._quarantine(st, i)
 
     def note_failure(self, i: int) -> None:
         """A request on instance ``i`` failed terminally."""
@@ -78,9 +82,9 @@ class HealthMonitor:
         st.failures += 1
         st.consecutive_failures += 1
         if st.state == "probation":
-            self._quarantine(st)
+            self._quarantine(st, i)
         elif st.consecutive_failures >= self.quarantine_after:
-            self._quarantine(st)
+            self._quarantine(st, i)
         elif (st.state == "healthy"
               and st.consecutive_failures >= self.degrade_after):
             st.state = "degraded"
@@ -103,16 +107,19 @@ class HealthMonitor:
                 if st.quarantine_left <= 0:
                     st.state = "probation"
 
-    def _quarantine(self, st: _InstanceHealth) -> None:
+    def _quarantine(self, st: _InstanceHealth, i: int) -> None:
         st.consecutive_failures = 0
         st.quarantine_len = (
             self.quarantine_steps if st.quarantine_len == 0
             else min(st.quarantine_len * 2, self.max_quarantine_steps))
         st.quarantine_left = st.quarantine_len
-        if st.state != "quarantined":
+        fresh = st.state != "quarantined"
+        if fresh:
             st.quarantines += 1
             self.quarantine_events += 1
         st.state = "quarantined"
+        if fresh and self.on_quarantine is not None:
+            self.on_quarantine(i)
 
     # -- export -------------------------------------------------------
     def snapshot(self) -> dict:

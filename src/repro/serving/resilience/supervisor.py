@@ -186,6 +186,14 @@ class Supervisor:
             await driver
         except BaseException:
             pass
+        # flight-record the WEDGED server now — the factory path below
+        # swaps it out before _recover runs (metrics/trace reads are
+        # host-side, safe even with the stalled step still in flight)
+        flight = getattr(eng.server, "flight", None)
+        if flight is not None and flight.enabled:
+            flight.dump(f"watchdog: {timeout}", server=eng.server,
+                        extra={"restarts": self.restarts,
+                               "in_flight": len(eng._streams)})
         if self.server_factory is not None:
             # hard restart: the stalled executor thread keeps the old
             # server; detach its token hook FIRST so late emissions
@@ -199,9 +207,19 @@ class Supervisor:
             new._req_counter = max(new._req_counter, old._req_counter)
             new.on_token = eng._hook
             new.metrics.resilience_fn = self.snapshot
+            # observability continuity (§6.9): the replacement server
+            # keeps the old ledger, flight recorder, and SLO config so
+            # tenant accounts and error budgets span the swap
+            new.accounting = old.accounting
+            new.accounting.queued_fn = new.scheduler.queued_instances
+            new.prefill.accounting = old.accounting
+            new.metrics.accounting_fn = old.accounting.snapshot
+            new.flight = old.flight
+            new.metrics.slo = old.metrics.slo
             eng.server = new
             return await self._recover(f"watchdog: {timeout}",
-                                       reset_state=False)
+                                       reset_state=False,
+                                       flight_dumped=True)
         # soft path: an executor thread cannot be killed — wait the
         # stalled step out, then reset state on the same server
         fut = eng._step_future
@@ -210,14 +228,25 @@ class Supervisor:
                 await asyncio.shield(fut)
             except BaseException:
                 pass
-        return await self._recover(f"watchdog: {timeout}")
+        return await self._recover(f"watchdog: {timeout}",
+                                   flight_dumped=True)
 
-    async def _recover(self, reason: str, *, reset_state: bool = True) -> bool:
+    async def _recover(self, reason: str, *, reset_state: bool = True,
+                       flight_dumped: bool = False) -> bool:
         """Backoff, reset the serving state, requeue every live request
         with its delivered prefix, and restart the driver.  Returns
         False when the restart budget is exhausted (watch loop exits)."""
         eng = self._engine
         loop = eng._loop
+        # flight recorder (§6.9): freeze the pre-reset state — trace
+        # tail, metrics/SLO snapshot, queue depths — while the incident
+        # is still visible (watchdog paths dumped the wedged server
+        # already and say so via ``flight_dumped``)
+        flight = getattr(eng.server, "flight", None)
+        if not flight_dumped and flight is not None and flight.enabled:
+            flight.dump(reason, server=eng.server,
+                        extra={"restarts": self.restarts,
+                               "in_flight": len(eng._streams)})
         if self.restarts >= self.max_restarts:
             await self._give_up(reason)
             return False
@@ -281,6 +310,11 @@ class Supervisor:
         (keeping its delivered tokens), fail pending submitters, close
         the engine.  Nobody hangs; nobody silently loses tokens."""
         eng = self._engine
+        flight = getattr(eng.server, "flight", None)
+        if flight is not None and flight.enabled:
+            flight.dump(f"give-up: {reason}", server=eng.server,
+                        extra={"restarts": self.restarts,
+                               "in_flight": len(eng._streams)})
         err = (f"engine driver failed permanently after "
                f"{self.restarts} restarts: {reason}")
         eng._fail_pending_commands(err)

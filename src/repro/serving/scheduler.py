@@ -128,6 +128,12 @@ class Scheduler:
         events, instead of m depth() calls)."""
         return [len(q) for q in self.queues]
 
+    def queued_instances(self) -> list[int]:
+        """Instances with at least one queued request — the waiters the
+        accounting layer's head-of-line interference report attributes
+        each settled device call against (§6.9)."""
+        return [m for m, q in enumerate(self.queues) if q]
+
     def total_pending(self) -> int:
         return sum(len(q) for q in self.queues)
 

@@ -19,10 +19,27 @@ The load-bearing contracts:
   compiled-shape counters (and the latter survives ``reset_metrics``),
 * the HTTP layer negotiates /metrics on Accept, exposes
   /debug/trace{,/start,/stop} + /metrics/reset, and /healthz flips to
-  503 when the driver task dies.
+  503 when the driver task dies,
+
+and the §6.9 accounting/SLO/flight layer (ISSUE 10):
+
+* accounting OFF and flight unarmed are free (bombed-methods proof,
+  same as the tracer's),
+* accounting ON conserves — per-tenant attributed time re-sums to
+  settled device wall (under chunked prefill, K=8 multi-step decode,
+  AND across a supervised driver crash with replay) — and never
+  changes greedy streams,
+* log-bucketed histograms bound percentile error by the bucket growth
+  factor and expose valid Prometheus ``histogram`` families
+  (monotone cumulative ``le`` buckets ending at +Inf == _count),
+* SLO objectives evaluate ok/burning/violated from cumulative budget
+  + recent burn, surfaced on /v1/slo, /healthz and /v1/models,
+* crash/watchdog/quarantine incidents freeze a ``flight/v1`` JSON
+  artifact that round-trips from disk.
 """
 import asyncio
 import json
+import math
 import os
 import re
 import subprocess
@@ -35,16 +52,28 @@ import jax
 
 from repro import api
 from repro.configs import registry
-from repro.serving import AsyncEngine, MultiModelServer, Request, start_http_server
+from repro.serving import (
+    AsyncEngine,
+    FlightRecorder,
+    MultiModelServer,
+    Request,
+    SLOConfig,
+    start_http_server,
+)
 from repro.serving.obs import (
+    LogHistogram,
     Tracer,
+    evaluate_availability,
+    evaluate_objective,
     profile_kernel,
     profile_serving_kernels,
     render_prometheus,
     serving_shapes,
     validate_profile,
+    worst_state,
 )
 from repro.serving.obs.prometheus import escape_label
+from repro.serving.obs.slo import HIST_GROWTH
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -352,14 +381,21 @@ def test_prometheus_exposition_parses_line_by_line():
             continue
         if line.startswith("# TYPE "):
             _, _, name, typ = line.split(" ", 3)
-            assert typ in ("counter", "gauge", "summary"), line
+            assert typ in ("counter", "gauge", "summary", "histogram"), line
             typed[name] = typ
             continue
         m = _SAMPLE.match(line)
         assert m, f"unparseable sample line: {line!r}"
         samples.setdefault(m.group(1), []).append(m.group(3))
-    # every sample was declared, every declared family has samples
-    assert set(samples) == set(typed)
+    # every sample was declared, every declared family has samples; a
+    # histogram family F exposes F_bucket/F_sum/F_count sample names
+    expect = set()
+    for name, typ in typed.items():
+        if typ == "histogram":
+            expect |= {f"{name}_bucket", f"{name}_sum", f"{name}_count"}
+        else:
+            expect.add(name)
+    assert set(samples) == expect
     gen = sum(r.max_new_tokens for r in _reqs())
     assert samples["repro_generated_tokens_total"] == [str(gen)]
     assert samples["repro_device_calls_total"][0].isdigit()
@@ -369,6 +405,50 @@ def test_prometheus_exposition_parses_line_by_line():
     # carry one per quantile
     assert len(samples["repro_instance_completed_total"]) == server.m
     assert len(samples["repro_ttft_milliseconds"]) == 3
+    assert typed["repro_instance_ttft_seconds"] == "histogram"
+
+
+def test_prometheus_histogram_le_buckets_are_valid():
+    """The real-histogram exposition contract (CI's observability job
+    leans on this): per-instance ``le`` bounds strictly increase,
+    cumulative counts never decrease, the family ends at ``le="+Inf"``
+    whose value equals ``_count``, and ``_sum``/``_count`` are
+    consistent with the recorded samples."""
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+    for r in _reqs():
+        server.submit(r)
+    server.run_until_drained()
+    text = render_prometheus(server.metrics.snapshot())
+
+    pat = re.compile(
+        r'^repro_instance_ttft_seconds_bucket'
+        r'\{instance="(\d+)",le="([^"]+)"\} (\d+)$')
+    buckets = {}
+    for line in text.strip().split("\n"):
+        m = pat.match(line)
+        if m:
+            buckets.setdefault(int(m.group(1)), []).append(
+                (m.group(2), int(m.group(3))))
+    assert set(buckets) == set(range(server.m))
+    counts = {}
+    sums = {}
+    for line in text.strip().split("\n"):
+        m = re.match(r'^repro_instance_ttft_seconds_(count|sum)'
+                     r'\{instance="(\d+)"\} (\S+)$', line)
+        if m:
+            (counts if m.group(1) == "count" else sums)[
+                int(m.group(2))] = float(m.group(3))
+    for i, rows in buckets.items():
+        les = [float("inf") if le == "+Inf" else float(le)
+               for le, _ in rows]
+        cums = [c for _, c in rows]
+        assert les == sorted(les) and len(set(les)) == len(les), i
+        assert les[-1] == float("inf"), i
+        assert cums == sorted(cums), i
+        assert cums[-1] == counts[i], i
+        assert counts[i] > 0              # every instance served a TTFT
+        assert sums[i] > 0
 
 
 def test_prometheus_label_escaping_roundtrips():
@@ -493,11 +573,21 @@ def test_http_observability_routes():
             _, _, body = await _req_http(port, "GET", "/metrics")
             assert json.loads(body)["generated_tokens"] == 0
 
+            # unconfigured SLO / flight recorder still answer (empty)
+            st, _, body = await _req_http(port, "GET", "/v1/slo")
+            assert st == 200 and json.loads(body) == {"configured": False}
+            st, _, body = await _req_http(port, "GET", "/debug/flight")
+            fl = json.loads(body)
+            assert st == 200 and fl["enabled"] is False
+            assert fl["count"] == 0 and fl["dumps"] == []
+
             # wrong methods answer 405, not 404
             for method, path in (("GET", "/metrics/reset"),
                                  ("GET", "/debug/trace/start"),
                                  ("POST", "/debug/trace"),
-                                 ("POST", "/healthz")):
+                                 ("POST", "/healthz"),
+                                 ("POST", "/v1/slo"),
+                                 ("POST", "/debug/flight")):
                 st, _, _ = await _req_http(port, method, path)
                 assert st == 405, (method, path)
 
@@ -562,6 +652,307 @@ def test_run_in_step_gap_without_running_driver():
     on, off = asyncio.run(run())
     assert on == {"tracing": True}
     assert off["tracing"] is False
+
+
+# ---------------------------------------------------------------------------
+# log-bucketed histograms + SLO evaluation (§6.9)
+# ---------------------------------------------------------------------------
+
+
+def test_loghistogram_percentile_error_bound_and_merge():
+    """The histogram replaces the biased sliding windows: over the full
+    sample set, every reported percentile is >= the exact one (bucket
+    upper bound, never under-reports) and within one growth factor of
+    it.  merge() is bucket-exact."""
+    import random
+
+    rng = random.Random(0)
+    vals = [rng.uniform(1e-3, 2.0) for _ in range(5000)]
+    h = LogHistogram()
+    for v in vals:
+        h.record(v)
+    s = sorted(vals)
+    for q in (0.5, 0.95, 0.99):
+        exact = s[max(0, math.ceil(q * len(s)) - 1)]
+        got = h.percentile(q)
+        assert exact <= got <= exact * HIST_GROWTH * 1.0001, (q, exact, got)
+    assert h.count == len(vals)
+    assert h.sum == pytest.approx(sum(vals))
+
+    a, b = LogHistogram(), LogHistogram()
+    for v in vals[:2000]:
+        a.record(v)
+    for v in vals[2000:]:
+        b.record(v)
+    a.merge(b)
+    assert a.counts == h.counts
+    assert a.percentile(0.99) == h.percentile(0.99)
+
+
+def test_loghistogram_inf_bucket_and_frac_le():
+    h = LogHistogram()
+    h.record(1e-6)          # below the ladder -> first bucket
+    h.record(500.0)         # above the ladder -> +Inf bucket
+    assert h.counts[0] == 1 and h.counts[-1] == 1
+    les, cums = zip(*h.buckets())
+    assert les[-1] == math.inf and cums[-1] == 2
+    assert list(cums) == sorted(cums)
+    # conservative: mid-bucket thresholds credit only whole buckets,
+    # and a +Inf-bucket sample is never credited to a finite threshold
+    assert h.frac_le(1.0) == 0.5
+    assert h.frac_le(1e3) == 0.5
+    # +Inf percentile falls back to the largest finite bound
+    assert h.percentile(0.99) == LogHistogram.les[-1]
+    assert LogHistogram().percentiles() is None
+
+
+def test_slo_objective_states_and_burn_rate():
+    good = LogHistogram()
+    for _ in range(1000):
+        good.record(0.010)                     # 10 ms, threshold 200 ms
+    ok = evaluate_objective(good, [0.010] * 50, 200.0, target=0.99)
+    assert ok["state"] == "ok"
+    assert ok["bad_frac"] == 0.0 and ok["burn_rate"] == 0.0
+    assert ok["budget_remaining"] == pytest.approx(1.0)
+
+    # cumulative fine, recent window failing fast -> burning
+    burning = evaluate_objective(good, [0.900] * 10 + [0.010] * 90,
+                                 200.0, target=0.99)
+    assert burning["state"] == "burning"
+    assert burning["burn_rate"] == pytest.approx(10.0)
+
+    # cumulative budget blown -> violated regardless of recent
+    bad = LogHistogram()
+    for _ in range(90):
+        bad.record(0.010)
+    for _ in range(10):
+        bad.record(0.900)
+    violated = evaluate_objective(bad, [0.010] * 50, 200.0, target=0.99)
+    assert violated["state"] == "violated"
+    assert violated["budget_remaining"] < 0
+
+    assert worst_state(["ok", "burning", "ok"]) == "burning"
+    assert worst_state(["burning", "violated"]) == "violated"
+    assert worst_state([]) == "ok"
+
+    avail = evaluate_availability(99, 1, target=0.99)
+    assert avail["state"] == "ok"
+    assert evaluate_availability(50, 50)["state"] == "violated"
+
+
+# ---------------------------------------------------------------------------
+# tenant accounting: zero-cost off, conserved + result-invisible on
+# ---------------------------------------------------------------------------
+
+
+def test_accounting_and_flight_off_run_no_code(monkeypatch):
+    """Accounting disabled (the default) and no flight dir: a full
+    drain — submit, queue wait, chunked prefill, scatter, decode,
+    finish — must never enter the ledger or the recorder (every method
+    is a bomb), same proof as the tracer's."""
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params)
+
+    def boom(*a, **k):
+        raise AssertionError("accounting/flight code ran while disabled")
+
+    for name in ("note_decode", "note_prefill", "note_scatter",
+                 "note_queue_wait", "note_replay", "_interfere",
+                 "snapshot", "conservation"):
+        monkeypatch.setattr(server.accounting, name, boom)
+    monkeypatch.setattr(server.flight, "dump", boom)
+    ids = [server.submit(r) for r in _reqs()]
+    results = server.run_until_drained()
+    assert {r.request_id for r in results} == set(ids)
+    assert all(r.status == "ok" for r in results)
+    assert server.accounting.enabled is False
+    assert len(server.flight) == 0
+    # quarantine hook only wires up when the recorder is armed
+    assert server.health.on_quarantine is None
+
+
+def test_accounted_streams_bit_identical_and_conserved():
+    """Accounting + tracing + SLO on, under chunked prefill AND K=8
+    multi-step decode: greedy streams bit-identical to the plain run,
+    and the ledger conserves (attributed time re-sums to settled wall
+    within float error — far inside the 1% acceptance bound)."""
+    cfg, params = _build("tinyllama-1.1b")
+
+    def drain(**kw):
+        server = _server(cfg, params, prefill_chunk=4, decode_steps=8, **kw)
+        if kw:
+            server.accounting.start()
+            server.tracer.start()
+        ids = [server.submit(r) for r in _reqs()]
+        res = {r.request_id: r.tokens for r in server.run_until_drained()}
+        return server, [res[i] for i in ids]
+
+    _, want = drain()
+    server, got = drain(slo=SLOConfig(ttft_ms=200.0, itl_ms=100.0))
+    assert got == want
+
+    cons = server.accounting.conservation()
+    assert cons["settled_s"] > 0
+    assert cons["rel_err"] < 1e-6, cons
+    snap = server.metrics.snapshot()
+    acct = snap["accounting"]
+    assert acct["enabled"] is True
+    assert acct["conservation_rel_err"] < 1e-6
+    assert set(acct["per_tenant"]) == {"0", "1"}
+    for t in acct["per_tenant"].values():
+        assert t["decode_s"] > 0 and t["prefill_s"] > 0
+    # every device call the metrics counted was attributed
+    assert acct["device_calls"] == snap["device_calls"]
+    # the SLO block rides the same snapshot
+    assert snap["slo"]["configured"] is True
+    assert len(snap["slo"]["instances"]) == server.m
+    for inst in snap["slo"]["instances"]:
+        assert set(inst["objectives"]) == {"ttft", "itl", "availability"}
+        assert inst["state"] in ("ok", "burning", "violated")
+
+
+def test_interference_report_under_backlog():
+    """With more requests than slots, tenants queue behind each other:
+    the head-of-line report must attribute each waiter's delay to the
+    occupants, and queue-wait accrues."""
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params, slots_per_instance=1)
+    server.accounting.start()
+    for _ in range(3):                       # backlog on both instances
+        for r in _reqs():
+            server.submit(r)
+    server.run_until_drained()
+    snap = server.accounting.snapshot()
+    assert snap["interference"], "no interference recorded under backlog"
+    waited = {int(w) for w in snap["interference"]}
+    assert waited <= {0, 1}
+    for acc in snap["interference"].values():
+        assert all(s > 0 for s in acc.values())
+    assert sum(t["queue_wait_s"] for t in snap["per_tenant"].values()) > 0
+    assert snap["conservation_rel_err"] < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# flight recorder + conservation across a supervised crash
+# ---------------------------------------------------------------------------
+
+
+def test_flight_dump_and_conservation_under_driver_crash(tmp_path):
+    """A supervised driver crash mid-run: the flight recorder freezes
+    the incident to disk (schema round-trip), conservation holds across
+    the recovery (replayed calls are attributed like any other), and
+    the replay view account is charged."""
+    from repro.serving import FaultInjector, FaultSpec, Supervisor
+
+    cfg, params = _build("tinyllama-1.1b")
+    inj = FaultInjector([FaultSpec(site="driver", at_call=3)])
+    server = _server(cfg, params, prefill_chunk=4, faults=inj,
+                     flight=FlightRecorder(str(tmp_path)),
+                     slo=SLOConfig(ttft_ms=200.0))
+    server.accounting.start()
+    server.tracer.start()
+    inj.arm()
+
+    async def main():
+        engine = AsyncEngine(server)
+        sup = Supervisor(engine, backoff_base_s=0.001)
+        async with sup:
+            async def client(r):
+                s = await engine.submit(r)
+                toks = [t async for t in s]
+                return toks, await s.result()
+
+            out = await asyncio.gather(*(client(r) for r in _reqs()))
+        return out, sup
+
+    out, sup = asyncio.run(main())
+    assert sup.restarts == 1
+    assert all(res.status == "ok" and res.tokens == toks
+               for toks, res in out)
+
+    # conservation survives the crash + replay (acceptance: < 1%)
+    snap = server.accounting.snapshot()
+    assert snap["conservation_rel_err"] < 0.01, snap
+    assert sum(t["replay_tokens"] for t in snap["per_tenant"].values()) > 0
+    assert sum(t["replay_s"] for t in snap["per_tenant"].values()) > 0
+
+    # the dump landed on disk and round-trips with the full schema
+    assert len(server.flight) >= 1
+    files = sorted(tmp_path.glob("flight-*.json"))
+    assert files
+    rec = json.loads(files[0].read_text())
+    assert rec["schema"] == "flight/v1"
+    assert rec["seq"] == 1
+    assert rec["reason"].startswith("crash:")
+    assert rec["extra"]["in_flight"] == len(_reqs())
+    assert isinstance(rec["queue_depths"], list)
+    assert rec["trace_events"], "trace tail missing from the dump"
+    kinds = {ev["event"] for ev in rec["trace_events"]}
+    assert kinds <= {"DeviceCallEvent", "RequestEvent"} and kinds
+    m = rec["metrics"]
+    assert m["slo"]["configured"] is True
+    assert m["accounting"]["enabled"] is True
+    # the in-memory ring serves the same record
+    assert server.flight.latest()[0]["seq"] == 1
+
+
+def test_quarantine_hook_fires_flight_dump(tmp_path):
+    """health.py's quarantine transition is a flight trigger: the hook
+    is wired only when the recorder is armed, and firing it dumps."""
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params, flight=FlightRecorder(str(tmp_path)))
+    assert server.health.on_quarantine is not None
+    server.health.on_quarantine(1)
+    assert len(server.flight) == 1
+    rec = server.flight.latest()[0]
+    assert rec["reason"] == "quarantine: instance 1"
+    assert rec["path"] and os.path.exists(rec["path"])
+
+
+# ---------------------------------------------------------------------------
+# SLO on the HTTP surface
+# ---------------------------------------------------------------------------
+
+
+def test_http_slo_routes_and_health_integration():
+    cfg, params = _build("tinyllama-1.1b")
+    server = _server(cfg, params, slo=SLOConfig(ttft_ms=60_000.0,
+                                                itl_ms=60_000.0))
+
+    async def run():
+        async with AsyncEngine(server) as engine:
+            http = await start_http_server(engine, port=0)
+            port = http.sockets[0].getsockname()[1]
+
+            st, _, body = await _req_http(
+                port, "POST", "/v1/completions",
+                payload={"model": 0, "prompt": [1, 2, 3], "max_tokens": 4})
+            assert st == 200
+
+            st, _, body = await _req_http(port, "GET", "/v1/slo")
+            rep = json.loads(body)
+            assert st == 200 and rep["configured"] is True
+            assert rep["config"]["ttft_ms"] == 60_000.0
+            assert len(rep["instances"]) == server.m
+            # thresholds are 60 s: a smoke drain cannot violate them
+            assert rep["instances"][0]["state"] == "ok"
+            assert rep["instances"][0]["objectives"]["ttft"]["count"] > 0
+
+            st, _, body = await _req_http(port, "GET", "/healthz")
+            h = json.loads(body)
+            assert st == 200
+            assert h["slo"] == ["ok", "ok"]
+            assert h["instance_health"] == ["healthy", "healthy"]
+
+            st, _, body = await _req_http(port, "GET", "/v1/models")
+            models = json.loads(body)["data"]
+            assert [mm["slo"] for mm in models] == ["ok", "ok"]
+            assert [mm["health"] for mm in models] == ["healthy", "healthy"]
+
+            http.close()
+            await http.wait_closed()
+
+    asyncio.run(run())
 
 
 # ---------------------------------------------------------------------------
